@@ -1,0 +1,47 @@
+"""Kernel-layer microbenchmarks (XLA path on CPU; Pallas targets TPU)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.rff import RFF
+from repro.kernels import ops
+
+__all__ = ["bench_rff_features", "bench_rff_attention"]
+
+
+def _time(fn, iters=5):
+    fn()
+    jax.block_until_ready(fn())
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters
+
+
+def bench_rff_features(m: int = 8192, d: int = 128, dfeat: int = 256):
+    """Feature-map GEMM+cos throughput. derived = GFLOP/s achieved."""
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (m, d))
+    w = jax.random.normal(jax.random.PRNGKey(1), (d, dfeat))
+    b = jnp.zeros((dfeat,))
+    fn = jax.jit(lambda: ops.rff_features(x, w, b, mode="xla"))
+    dt = _time(fn)
+    flops = 2 * m * d * dfeat
+    return dt / m * 1e6, flops / dt / 1e9, {"seconds": dt}
+
+
+def bench_rff_attention(s: int = 4096, dfeat: int = 64, dv: int = 64,
+                        chunk: int = 256):
+    """Chunked linear attention throughput. derived = tokens/second."""
+    key = jax.random.PRNGKey(0)
+    ks = jax.random.split(key, 3)
+    q = jax.nn.relu(jax.random.normal(ks[0], (4, s, dfeat))) + 0.01
+    k = jax.nn.relu(jax.random.normal(ks[1], (4, s, dfeat))) + 0.01
+    v = jax.random.normal(ks[2], (4, s, dv))
+    fn = jax.jit(lambda: ops.rff_attention(q, k, v, mode="xla", chunk=chunk))
+    dt = _time(fn)
+    return dt / (4 * s) * 1e6, 4 * s / dt, {"seconds": dt}

@@ -1,0 +1,277 @@
+"""Paper-figure reproductions (one function per figure/table).
+
+Each returns ``(us_per_call, derived, detail)`` where ``us_per_call`` is the
+mean per-sample processing time of the headline algorithm and ``derived`` is
+the figure's headline quantity. ``--runs`` trades CI time for Monte-Carlo
+smoothness; defaults are sized for minutes-not-hours on CPU while preserving
+every qualitative claim (full paper-scale settings via flags).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    ald_krls_run,
+    qklms_run,
+    rff_klms_run,
+    rff_krls_run,
+    sample_rff,
+)
+from repro.core.adaptive import monte_carlo_mse
+from repro.core.theory import rzz_closed_form, steady_state_mse
+from repro.data.synthetic import (
+    gen_chaotic1,
+    gen_chaotic2,
+    gen_kernel_expansion,
+    gen_nonlinear_wiener,
+)
+
+__all__ = [
+    "fig1_convergence",
+    "fig2a_klms_vs_qklms",
+    "fig2b_krls",
+    "fig3a_chaotic1",
+    "fig3b_chaotic2",
+    "table1_timing",
+]
+
+
+def _timed(fn):
+    fn()  # compile
+    t0 = time.perf_counter()
+    out = fn()
+    jax.block_until_ready(out)
+    return out, time.perf_counter() - t0
+
+
+def fig1_convergence(runs: int = 50, num_samples: int = 5000, rff_dim: int = 1000):
+    """§5.1/Fig.1: RFFKLMS on model (7); steady-state vs Prop. 1.4 theory.
+
+    derived = measured steady-state MSE / theoretical prediction (target ~1).
+    """
+    key = jax.random.PRNGKey(0)
+    rff = sample_rff(key, 5, rff_dim, sigma=5.0)
+
+    def realization(k):
+        data = gen_kernel_expansion(k, num_samples=num_samples)
+        _, out = rff_klms_run(rff, data.xs, data.ys, mu=1.0)
+        return out.error
+
+    mse_fn = jax.jit(lambda k: monte_carlo_mse(realization, k, runs))
+    curve, dt = _timed(lambda: mse_fn(jax.random.PRNGKey(1)))
+    steady = float(jnp.mean(curve[-500:]))
+    theory = float(steady_state_mse(rzz_closed_form(rff, 1.0), 1.0, 0.1))
+    us = dt / (runs * num_samples) * 1e6
+    detail = {
+        "mse_at_500": float(jnp.mean(curve[450:550])),
+        "mse_at_2000": float(jnp.mean(curve[1950:2050])),
+        "steady_state_mse": steady,
+        "theory_mse": theory,
+    }
+    return us, steady / theory, detail
+
+
+def _klms_vs_qklms(gen, sigma, mu, eps, rff_dim, qcap, runs, n):
+    key = jax.random.PRNGKey(0)
+    rff = sample_rff(key, gen(jax.random.PRNGKey(9))[0].shape[-1], rff_dim, sigma)
+
+    def real_rff(k):
+        xs, ys = gen(k)
+        _, out = rff_klms_run(rff, xs, ys, mu=mu)
+        return out.error
+
+    def real_q(k):
+        xs, ys = gen(k)
+        _, out = qklms_run(xs, ys, sigma=sigma, mu=mu, eps=eps, capacity=qcap)
+        return out.error
+
+    rff_fn = jax.jit(lambda k: monte_carlo_mse(real_rff, k, runs))
+    q_fn = jax.jit(lambda k: monte_carlo_mse(real_q, k, runs))
+    curve_rff, t_rff = _timed(lambda: rff_fn(jax.random.PRNGKey(1)))
+    curve_q, t_q = _timed(lambda: q_fn(jax.random.PRNGKey(1)))
+    tail = max(n // 10, 50)
+    mse_rff = float(jnp.mean(curve_rff[-tail:]))
+    mse_q = float(jnp.mean(curve_q[-tail:]))
+    # final dictionary size of one QKLMS run (for the table)
+    xs, ys = gen(jax.random.PRNGKey(2))
+    final_q, _ = qklms_run(xs, ys, sigma=sigma, mu=mu, eps=eps, capacity=qcap)
+    return {
+        "us_rffklms": t_rff / (runs * n) * 1e6,
+        "us_qklms": t_q / (runs * n) * 1e6,
+        "mse_rffklms": mse_rff,
+        "mse_qklms": mse_q,
+        "qklms_dict_size": int(final_q.size),
+        "speedup": t_q / t_rff,
+    }
+
+
+def fig2a_klms_vs_qklms(runs: int = 25, num_samples: int = 15000):
+    """§5.2/Fig.2a: RFFKLMS (D=300) vs QKLMS (eps=5, M~100) on model (9).
+
+    derived = MSE(RFFKLMS)/MSE(QKLMS) at steady state (paper: ~1).
+    """
+    r = _klms_vs_qklms(
+        lambda k: gen_nonlinear_wiener(k, num_samples=num_samples),
+        sigma=5.0, mu=1.0, eps=5.0, rff_dim=300, qcap=256,
+        runs=runs, n=num_samples,
+    )
+    return r["us_rffklms"], r["mse_rffklms"] / r["mse_qklms"], r
+
+
+def fig3a_chaotic1(runs: int = 200, num_samples: int = 500):
+    """§5.3/Fig.3a: chaotic series 1, D=100 vs QKLMS eps=0.01 (M~7)."""
+    r = _klms_vs_qklms(
+        lambda k: gen_chaotic1(k, num_samples=num_samples),
+        sigma=0.05, mu=1.0, eps=0.01, rff_dim=100, qcap=64,
+        runs=runs, n=num_samples,
+    )
+    return r["us_rffklms"], r["mse_rffklms"] / r["mse_qklms"], r
+
+
+def fig3b_chaotic2(runs: int = 200, num_samples: int = 1000):
+    """§5.4/Fig.3b: chaotic series 2, D=100 vs QKLMS eps=0.01 (M~32)."""
+    r = _klms_vs_qklms(
+        lambda k: gen_chaotic2(k, num_samples=num_samples),
+        sigma=0.05, mu=1.0, eps=0.01, rff_dim=100, qcap=128,
+        runs=runs, n=num_samples,
+    )
+    return r["us_rffklms"], r["mse_rffklms"] / r["mse_qklms"], r
+
+
+def fig2b_krls(runs: int = 10, num_samples: int = 3000):
+    """§6/Fig.2b: RFFKRLS (D=300, lam=1e-4, beta=0.9995) vs Engel ALD-KRLS.
+
+    nu=5e-3 instead of the paper's 5e-4: the bordered inverse of the
+    near-flat sigma=5 kernel is f64-only at 5e-4 (see tests) — documented
+    deviation. derived = MSE(RFFKRLS)/MSE(ALD-KRLS).
+    """
+    key = jax.random.PRNGKey(0)
+    rff = sample_rff(key, 5, 300, sigma=5.0)
+
+    def real_rff(k):
+        xs, ys = gen_nonlinear_wiener(k, num_samples=num_samples)
+        _, out = rff_krls_run(rff, xs, ys, lam=1e-4, beta=0.9995)
+        return out.error
+
+    def real_ald(k):
+        xs, ys = gen_nonlinear_wiener(k, num_samples=num_samples)
+        _, out = ald_krls_run(xs, ys, sigma=5.0, nu=5e-3, capacity=128)
+        return out.error
+
+    f_r = jax.jit(lambda k: monte_carlo_mse(real_rff, k, runs))
+    f_a = jax.jit(lambda k: monte_carlo_mse(real_ald, k, runs))
+    curve_r, t_r = _timed(lambda: f_r(jax.random.PRNGKey(1)))
+    curve_a, t_a = _timed(lambda: f_a(jax.random.PRNGKey(1)))
+    mse_r = float(jnp.mean(curve_r[-300:]))
+    mse_a = float(jnp.mean(curve_a[-300:]))
+    detail = {
+        "mse_rffkrls": mse_r,
+        "mse_aldkrls": mse_a,
+        "us_rffkrls": t_r / (runs * num_samples) * 1e6,
+        "us_aldkrls": t_a / (runs * num_samples) * 1e6,
+        "speedup_vs_engel": t_a / t_r,
+    }
+    return detail["us_rffkrls"], mse_r / mse_a, detail
+
+
+def table1_highdim(runs: int = 3, num_samples: int = 4000, input_dim: int = 20):
+    """The paper's §1 scaling argument, demonstrated: at input_dim=20 the
+    quantized dictionary blows up (curse of dimensionality) while RFFKLMS
+    stays at fixed D — this is the regime where the complexity claim
+    O(Dd) < O(Md) holds even for a fully vectorized QKLMS.
+
+    derived = RFFKLMS speedup over QKLMS (>1 expected here).
+    """
+    key = jax.random.PRNGKey(0)
+    rff = sample_rff(key, input_dim, 300, sigma=5.0)
+
+    def gen(k):
+        d = gen_kernel_expansion(
+            k, num_samples=num_samples, input_dim=input_dim, sigma=5.0
+        )
+        return d.xs, d.ys
+
+    def real_rff(k):
+        xs, ys = gen(k)
+        _, out = rff_klms_run(rff, xs, ys, mu=1.0)
+        return out.error
+
+    def real_q(k):
+        xs, ys = gen(k)
+        _, out = qklms_run(xs, ys, sigma=5.0, mu=1.0, eps=10.0, capacity=2048)
+        return out.error
+
+    f_r = jax.jit(lambda k: monte_carlo_mse(real_rff, k, runs))
+    f_q = jax.jit(lambda k: monte_carlo_mse(real_q, k, runs))
+    curve_r, t_r = _timed(lambda: f_r(jax.random.PRNGKey(1)))
+    curve_q, t_q = _timed(lambda: f_q(jax.random.PRNGKey(1)))
+    xs, ys = gen(jax.random.PRNGKey(2))
+    fq, _ = qklms_run(xs, ys, sigma=5.0, mu=1.0, eps=10.0, capacity=2048)
+    detail = {
+        "qklms_dict_size": int(fq.size),
+        "rff_D": 300,
+        "us_rffklms": t_r / (runs * num_samples) * 1e6,
+        "us_qklms": t_q / (runs * num_samples) * 1e6,
+        "mse_rffklms": float(jnp.mean(curve_r[-400:])),
+        "mse_qklms": float(jnp.mean(curve_q[-400:])),
+        "speedup": t_q / t_r,
+    }
+    return detail["us_rffklms"], detail["speedup"], detail
+
+
+def table1_timing(runs: int = 5):
+    """Table 1: mean training time, QKLMS vs RFFKLMS, examples 2/3/4.
+
+    derived = mean RFFKLMS speedup across the three examples (paper: 2-6x).
+    """
+    rows = {}
+    speeds = []
+    for name, fn in (
+        ("example2", lambda: fig2a_klms_vs_qklms(runs=runs, num_samples=15000)),
+        ("example3", lambda: fig3a_chaotic1(runs=runs, num_samples=500)),
+        ("example4", lambda: fig3b_chaotic2(runs=runs, num_samples=1000)),
+    ):
+        _, _, r = fn()
+        rows[name] = {
+            "rffklms_s_per_run": r["us_rffklms"] * 1e-6 * (15000 if name == "example2" else 500 if name == "example3" else 1000),
+            "qklms_s_per_run": r["us_qklms"] * 1e-6 * (15000 if name == "example2" else 500 if name == "example3" else 1000),
+            "qklms_dict": r["qklms_dict_size"],
+            "speedup": r["speedup"],
+        }
+        speeds.append(r["speedup"])
+    us = rows["example2"]["rffklms_s_per_run"] / 15000 * 1e6
+    return us, float(jnp.mean(jnp.asarray(speeds))), rows
+
+
+def orf_vs_iid(num_seeds: int = 16, input_dim: int = 8, rff_dim: int = 64):
+    """Beyond-paper: Orthogonal Random Features vs the paper's iid draw.
+
+    derived = RMSE(iid) / RMSE(orthogonal) at equal D (>1 means ORF wins —
+    the same fixed-size solution buys a lower kernel-approximation error).
+    """
+    from repro.core.rff import gaussian_kernel, kernel_estimate
+
+    x = jax.random.normal(jax.random.PRNGKey(1), (256, input_dim))
+    y = jax.random.normal(jax.random.PRNGKey(2), (256, input_dim))
+    exact = gaussian_kernel(x, y, 2.0)
+
+    def rmse(orth):
+        errs = []
+        for s in range(num_seeds):
+            rff = sample_rff(
+                jax.random.PRNGKey(100 + s), input_dim, rff_dim, 2.0,
+                orthogonal=orth,
+            )
+            approx = kernel_estimate(rff, x, y)
+            errs.append(float(jnp.sqrt(jnp.mean((approx - exact) ** 2))))
+        return sum(errs) / len(errs)
+
+    t0 = time.perf_counter()
+    r_iid = rmse(False)
+    r_orf = rmse(True)
+    dt = time.perf_counter() - t0
+    detail = {"rmse_iid": r_iid, "rmse_orthogonal": r_orf}
+    return dt / (2 * num_seeds) * 1e6, r_iid / r_orf, detail

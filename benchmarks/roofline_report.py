@@ -1,0 +1,46 @@
+"""Roofline table from the dry-run artifacts (experiments/dryrun/*.json)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+__all__ = ["roofline_table", "load_cells"]
+
+DEFAULT_DIR = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "experiments", "dryrun",
+)
+
+
+def load_cells(dryrun_dir: str = DEFAULT_DIR, mesh: str = "16x16") -> list[dict]:
+    cells = []
+    for f in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        rec = json.load(open(f))
+        if rec.get("mesh") == mesh:
+            cells.append(rec)
+    return cells
+
+
+def roofline_table(dryrun_dir: str = DEFAULT_DIR):
+    """derived = mean useful-FLOPs fraction over the 16 train+prefill cells
+    (decode cells are inherently memory-bound; their 'useful' fraction is
+    not a compute-efficiency signal)."""
+    cells = load_cells(dryrun_dir)
+    if not cells:
+        return 0.0, 0.0, {"error": "no dry-run artifacts; run repro.launch.dryrun"}
+    rows = {}
+    fracs = []
+    for rec in cells:
+        r = rec["roofline"]
+        rows[f"{rec['arch']}/{rec['shape']}"] = {
+            "dominant": r["dominant"],
+            "compute_s": round(r["compute_s"], 5),
+            "memory_s": round(r["memory_s"], 5),
+            "collective_s": round(r["collective_s"], 5),
+            "useful_frac": round(r["useful_flops_frac"], 4),
+        }
+        if rec["kind"] in ("train", "prefill"):
+            fracs.append(r["useful_flops_frac"])
+    mean_frac = sum(fracs) / max(len(fracs), 1)
+    return 0.0, mean_frac, rows

@@ -1,0 +1,54 @@
+"""Benchmark harness: one function per paper table/figure + kernel/roofline.
+
+Prints ``name,us_per_call,derived`` CSV (detail dicts go to stderr-style
+comment lines prefixed with '#'). ``--full`` switches to paper-scale
+Monte-Carlo run counts; default sizes keep the whole suite at CI scale.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from benchmarks import kernels_bench, paper, roofline_report
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="paper-scale runs")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    scale = 4 if args.full else 1
+    benches = {
+        "fig1_convergence": lambda: paper.fig1_convergence(runs=25 * scale),
+        "fig2a_klms_vs_qklms": lambda: paper.fig2a_klms_vs_qklms(runs=10 * scale),
+        "fig2b_krls": lambda: paper.fig2b_krls(runs=5 * scale),
+        "fig3a_chaotic1": lambda: paper.fig3a_chaotic1(runs=100 * scale),
+        "fig3b_chaotic2": lambda: paper.fig3b_chaotic2(runs=100 * scale),
+        "table1_timing": lambda: paper.table1_timing(runs=3 * scale),
+        "table1_highdim": lambda: paper.table1_highdim(runs=3 * scale),
+        "orf_vs_iid": lambda: paper.orf_vs_iid(num_seeds=8 * scale),
+        "kernel_rff_features": kernels_bench.bench_rff_features,
+        "kernel_rff_attention": kernels_bench.bench_rff_attention,
+        "roofline": roofline_report.roofline_table,
+    }
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, fn in benches.items():
+        if args.only and args.only != name:
+            continue
+        try:
+            us, derived, detail = fn()
+            print(f"{name},{us:.3f},{derived:.4f}")
+            print(f"# {name}: {json.dumps(detail)[:2000]}", flush=True)
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            print(f"{name},nan,nan")
+            print(f"# {name} FAILED: {e!r}", file=sys.stderr, flush=True)
+    if failures:
+        raise SystemExit(f"{failures} benchmarks failed")
+
+
+if __name__ == "__main__":
+    main()

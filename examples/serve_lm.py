@@ -1,0 +1,70 @@
+"""Batched serving with fixed-size-state long-context decode.
+
+Compares the growing KV cache (standard GQA) against the paper-derived RFF
+linear-attention state whose size is independent of context length — the
+serving analogue of RFFKLMS's fixed theta.
+
+    PYTHONPATH=src python examples/serve_lm.py --tokens 64
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import (
+    decode_state_init,
+    decode_step,
+    init_params,
+    with_rff_attention,
+)
+
+
+def bytes_of(tree):
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(tree))
+
+
+def generate(cfg, params, batch, steps, max_len):
+    state = decode_state_init(cfg, batch, max_len=max_len)
+    step = jax.jit(lambda p, s, t: decode_step(p, cfg, s, t))
+    tok = jnp.zeros((batch,), jnp.int32)
+    toks = []
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        logits, state = step(params, state, tok)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        toks.append(np.asarray(tok))
+    jax.block_until_ready(logits)
+    dt = time.perf_counter() - t0
+    return np.stack(toks, 1), dt, bytes_of(state)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3-8b")
+    ap.add_argument("--tokens", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=4)
+    args = ap.parse_args()
+
+    base = get_config(args.arch).reduced()
+    key = jax.random.PRNGKey(0)
+
+    for label, cfg, max_len in (
+        ("gqa + KV cache (ctx 4096)   ", base, 4096),
+        ("rff fixed state (ctx = any) ", with_rff_attention(base), 4096),
+    ):
+        params = init_params(key, cfg)
+        toks, dt, state_bytes = generate(cfg, params, args.batch, args.tokens, max_len)
+        print(
+            f"{label}: {args.tokens} toks x{args.batch} in {dt:.2f}s "
+            f"({args.batch*args.tokens/dt:.1f} tok/s), decode state "
+            f"{state_bytes/1e6:.2f} MB"
+        )
+    print("\nThe RFF state stays the same size at 4k, 32k, or 524k context —")
+    print("that is what makes the long_500k decode cells lowerable at all.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""repro — RFF kernel adaptive filtering (KLMS/KRLS) at framework scale.
+
+Reproduction + TPU-native extension of Bouboulis, Pougkakiotis & Theodoridis,
+"Efficient KLMS and KRLS Algorithms: A Random Fourier Feature Perspective"
+(2016). See DESIGN.md for the system map.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,64 @@
+"""Core library: the paper's contribution as composable JAX modules.
+
+RFF feature maps (rff), RFFKLMS (klms), RFFKRLS (krls), the paper's baselines
+QKLMS (qklms) and Engel's ALD-KRLS (krls_ald), the convergence theory oracles
+(theory), Monte-Carlo drivers (adaptive) and diffusion-distributed variants
+(distributed).
+"""
+from repro.core.rff import (
+    RFF,
+    sample_rff,
+    rff_features,
+    kernel_estimate,
+    gaussian_kernel,
+    sample_prf,
+    positive_random_features,
+)
+from repro.core.klms import (
+    LMSState,
+    StepOut,
+    rff_klms_init,
+    rff_klms_step,
+    rff_klms_run,
+    rff_klms_batch_step,
+)
+from repro.core.krls import RLSState, rff_krls_init, rff_krls_step, rff_krls_run
+from repro.core.qklms import QKLMSState, qklms_init, qklms_step, qklms_run
+from repro.core.krls_ald import (
+    ALDKRLSState,
+    ald_krls_init,
+    ald_krls_step,
+    ald_krls_run,
+)
+from repro.core import theory, adaptive, distributed
+
+__all__ = [
+    "RFF",
+    "sample_rff",
+    "rff_features",
+    "kernel_estimate",
+    "gaussian_kernel",
+    "sample_prf",
+    "positive_random_features",
+    "LMSState",
+    "StepOut",
+    "rff_klms_init",
+    "rff_klms_step",
+    "rff_klms_run",
+    "rff_klms_batch_step",
+    "RLSState",
+    "rff_krls_init",
+    "rff_krls_step",
+    "rff_krls_run",
+    "QKLMSState",
+    "qklms_init",
+    "qklms_step",
+    "qklms_run",
+    "ALDKRLSState",
+    "ald_krls_init",
+    "ald_krls_step",
+    "ald_krls_run",
+    "theory",
+    "adaptive",
+    "distributed",
+]

@@ -1,0 +1,47 @@
+"""Deterministic, seekable synthetic LM data pipeline.
+
+Every batch is a pure function of ``(seed, step)`` via PRNG fold-in — no
+iterator state to checkpoint, so restart-exactness is free: resuming at step
+``n`` reproduces byte-identical batches regardless of how many workers died
+in between. The same property gives elastic scaling (a re-sharded resume
+consumes the identical global batch).
+
+The token stream is a order-2 Markov chain over the vocab (cheap but
+learnable structure, so training loss decreases measurably — used by the
+end-to-end example).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["batch_at_step", "markov_batch"]
+
+
+def batch_at_step(
+    seed: int, step: int, *, global_batch: int, seq_len: int, vocab: int
+) -> jax.Array:
+    """(B, S) int32 tokens — pure function of (seed, step)."""
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    return markov_batch(key, global_batch, seq_len, vocab)
+
+
+def markov_batch(key: jax.Array, batch: int, seq_len: int, vocab: int) -> jax.Array:
+    """Order-2-ish structured tokens: t_{n+1} = f(t_n) + small noise."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    start = jax.random.randint(k1, (batch,), 0, vocab)
+    # fixed pseudo-random transition: affine map mod vocab + occasional jump
+    mult = 6364136223846793005 % vocab or 1
+    noise = jax.random.bernoulli(k2, 0.1, (batch, seq_len))
+    jumps = jax.random.randint(k3, (batch, seq_len), 0, vocab)
+
+    def body(tok, inp):
+        flip, jump = inp
+        nxt = (tok * mult + 12345) % vocab
+        nxt = jnp.where(flip, jump, nxt)
+        return nxt, nxt
+
+    _, toks = jax.lax.scan(
+        body, start, (noise.T, jumps.T)
+    )
+    return toks.T.astype(jnp.int32)

@@ -1,0 +1,27 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+``rff_features``: fused feature-map GEMM+cos (the paper's O(Dd) hot spot).
+``rff_attention``: chunked causal linear attention with fixed-size VMEM state
+(the paper's insight applied to the attention kernel).
+``flash_attention``: blocked online-softmax attention (the full-attention
+archs' train/prefill hot spot — the exact-kernel counterpart to RFF).
+
+Each kernel has a pure-jnp oracle in ``ref.py`` and a backend-dispatching
+wrapper in ``ops.py``; correctness is swept in tests with ``interpret=True``.
+"""
+from repro.kernels import ops, ref
+from repro.kernels.ops import (
+    flash_attention,
+    rff_attention,
+    rff_attention_decode,
+    rff_features,
+)
+
+__all__ = [
+    "ops",
+    "ref",
+    "rff_features",
+    "rff_attention",
+    "rff_attention_decode",
+    "flash_attention",
+]

@@ -1,0 +1,118 @@
+"""Pallas TPU kernel: blocked causal flash attention (online softmax).
+
+The perf-critical hot spot of the full-attention architectures (train/
+prefill). Complements the RFF linear-attention kernel: flash keeps the
+*exact* softmax kernel at O(S·blk) memory; RFF replaces it with a fixed-size
+state. Same VMEM/MXU blocking discipline:
+
+  * grid ``(BH, S/bq, S/bk)`` — kv-block index innermost, so the online-
+    softmax running statistics (m, l) and the output accumulator carry in
+    VMEM scratch across the minor dimension;
+  * q tile (bq, dh) is read once per (bh, qi) and re-used for all kv blocks;
+  * causal masking per tile via 2D iota; fully-masked tiles still execute
+    (structural roofline cost — Pallas TPU grids are static) but their
+    contribution is exactly zero.
+
+VMEM at defaults (bq=bk=256, dh=128, f32): q/k/v tiles 128 KiB each,
+acc 128 KiB, scores 256 KiB → < 1 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["flash_attention_kernel", "flash_attention_pallas"]
+
+NEG_INF = -1e30
+
+
+def flash_attention_kernel(
+    q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, scale: float,
+    causal: bool, bq: int, bk: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32) * scale  # (bq, dh)
+    k = k_ref[0].astype(jnp.float32)  # (bk, dh)
+    v = v_ref[0].astype(jnp.float32)  # (bk, dv)
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)  # (bq, bk)
+    if causal:
+        qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        s = jnp.where(qpos >= kpos, s, NEG_INF)
+
+    m_prev = m_ref[...][:, 0]  # (bq,)
+    l_prev = l_ref[...][:, 0]
+    m_blk = jnp.max(s, axis=-1)
+    m_new = jnp.maximum(m_prev, m_blk)
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jnp.dot(
+        p, v, preferred_element_type=jnp.float32
+    )
+    m_ref[...] = m_new[:, None]
+    l_ref[...] = l_new[:, None]
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...][:, 0], 1e-30)
+        o_ref[0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_q", "block_k", "causal", "interpret"),
+)
+def flash_attention_pallas(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    block_q: int = 256,
+    block_k: int = 256,
+    causal: bool = True,
+    interpret: bool = False,
+) -> jax.Array:
+    """Exact softmax attention, blocked. Shapes ``(BH, S, dh)`` (MHA layout:
+    repeat GQA kv to full heads upstream, like the model layer does).
+    """
+    bh, s, dh = q.shape
+    dv = v.shape[-1]
+    bq = min(block_q, s)
+    bk = min(block_k, s)
+    assert s % bq == 0 and s % bk == 0, (s, bq, bk)
+    scale = dh**-0.5
+    grid = (bh, s // bq, s // bk)
+    return pl.pallas_call(
+        functools.partial(
+            flash_attention_kernel, scale=scale, causal=causal, bq=bq, bk=bk
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, dv), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dv), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, dv), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),  # running max
+            pltpu.VMEM((bq, 1), jnp.float32),  # running denominator
+            pltpu.VMEM((bq, dv), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

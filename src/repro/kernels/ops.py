@@ -1,0 +1,185 @@
+"""Public jit'd wrappers for the Pallas kernels, with backend dispatch.
+
+On TPU the compiled Pallas kernels run natively; on CPU (this container) the
+default is the pure-XLA reference path, with ``interpret=True`` Pallas
+execution available for kernel-correctness tests. The API is stable across
+backends so the model code never branches.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.rff_features import rff_features_pallas
+from repro.kernels.rff_attention import rff_attention_pallas
+from repro.kernels.flash_attention import flash_attention_pallas
+
+__all__ = [
+    "default_backend",
+    "rff_features",
+    "rff_attention",
+    "rff_attention_decode",
+    "flash_attention",
+]
+
+
+def default_backend() -> str:
+    return jax.default_backend()
+
+
+def _use_pallas(mode: str) -> tuple[bool, bool]:
+    """Resolve mode -> (use_pallas, interpret)."""
+    if mode == "auto":
+        on_tpu = default_backend() == "tpu"
+        return on_tpu, False
+    if mode == "pallas":
+        return True, default_backend() != "tpu"
+    if mode == "interpret":
+        return True, True
+    if mode == "xla":
+        return False, False
+    raise ValueError(f"unknown kernel mode {mode!r}")
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "block_m", "block_n", "block_k"))
+def rff_features(
+    x: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    *,
+    mode: str = "auto",
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+) -> jax.Array:
+    """Feature map ``sqrt(2/D) cos(x @ w + b)`` over arbitrary leading dims."""
+    use_pallas, interpret = _use_pallas(mode)
+    if not use_pallas:
+        return ref.rff_features_ref(x, w, b)
+    lead = x.shape[:-1]
+    x2 = x.reshape(-1, x.shape[-1])
+    out = rff_features_pallas(
+        x2, w, b,
+        block_m=block_m, block_n=block_n, block_k=block_k,
+        interpret=interpret,
+    )
+    return out.reshape(*lead, w.shape[-1])
+
+
+@functools.partial(
+    jax.jit, static_argnames=("mode", "chunk", "normalize", "eps")
+)
+def rff_attention(
+    phi_q: jax.Array,
+    phi_k: jax.Array,
+    v: jax.Array,
+    *,
+    mode: str = "auto",
+    chunk: int = 256,
+    normalize: bool = True,
+    eps: float = 1e-6,
+) -> jax.Array:
+    """Causal linear attention over feature-mapped q/k. Shapes (BH, S, dv)."""
+    use_pallas, interpret = _use_pallas(mode)
+    if not use_pallas:
+        # Chunked scan in pure XLA — same O(S·C·D) math as the kernel (the
+        # quadratic ref is O(S^2) and would be unusable at 500k tokens).
+        return _chunked_linear_attention_xla(
+            phi_q, phi_k, v, chunk=chunk, normalize=normalize, eps=eps
+        )
+    return rff_attention_pallas(
+        phi_q, phi_k, v,
+        chunk=chunk, normalize=normalize, eps=eps, interpret=interpret,
+    )
+
+
+def _chunked_linear_attention_xla(phi_q, phi_k, v, *, chunk, normalize, eps):
+    bh, s, d = phi_q.shape
+    dv = v.shape[-1]
+    c = min(chunk, s)
+    assert s % c == 0
+    n = s // c
+    qc = phi_q.reshape(bh, n, c, d).astype(jnp.float32)
+    kc = phi_k.reshape(bh, n, c, d).astype(jnp.float32)
+    vc = v.reshape(bh, n, c, dv).astype(jnp.float32)
+    mask = jnp.tril(jnp.ones((c, c), jnp.float32))
+
+    def body(carry, inp):
+        s_state, z_state = carry  # (bh, d, dv), (bh, d)
+        q, k, vv = inp  # (bh, c, d), (bh, c, d), (bh, c, dv)
+        a = jnp.einsum("btd,bsd->bts", q, k) * mask
+        out = jnp.einsum("bts,bsv->btv", a, vv) + jnp.einsum(
+            "btd,bdv->btv", q, s_state
+        )
+        if normalize:
+            denom = jnp.sum(a, -1) + jnp.einsum("btd,bd->bt", q, z_state)
+            out = out / (denom + eps)[..., None]
+        s_state = s_state + jnp.einsum("bsd,bsv->bdv", k, vv)
+        z_state = z_state + jnp.sum(k, axis=1)
+        return (s_state, z_state), out
+
+    init = (
+        jnp.zeros((bh, d, dv), jnp.float32),
+        jnp.zeros((bh, d), jnp.float32),
+    )
+    qn = jnp.moveaxis(qc, 1, 0)  # (n, bh, c, d) scan over chunks
+    kn = jnp.moveaxis(kc, 1, 0)
+    vn = jnp.moveaxis(vc, 1, 0)
+    _, outs = jax.lax.scan(body, init, (qn, kn, vn))
+    out = jnp.moveaxis(outs, 0, 1).reshape(bh, s, dv)
+    return out.astype(phi_q.dtype)
+
+
+@jax.jit
+def rff_attention_decode(
+    s_state: jax.Array,
+    z_state: jax.Array,
+    phi_q: jax.Array,
+    phi_k: jax.Array,
+    v: jax.Array,
+    *,
+    eps: float = 1e-6,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One decode step from the fixed-size state (the RFFKLMS-style update).
+
+    Args:
+      s_state: ``(BH, D, dv)`` running sum of phi(k) v^T.
+      z_state: ``(BH, D)`` running sum of phi(k).
+      phi_q, phi_k: ``(BH, D)`` features of the new token.
+      v: ``(BH, dv)`` value of the new token.
+
+    Returns:
+      (output ``(BH, dv)``, new_s, new_z). O(D·dv) per token, O(1) in context
+      length — the KV cache never grows.
+    """
+    s_new = s_state + jnp.einsum("bd,bv->bdv", phi_k, v)
+    z_new = z_state + phi_k
+    num = jnp.einsum("bd,bdv->bv", phi_q, s_new)
+    den = jnp.einsum("bd,bd->b", phi_q, z_new) + eps
+    return num / den[:, None], s_new, z_new
+
+
+@functools.partial(
+    jax.jit, static_argnames=("mode", "block_q", "block_k", "causal")
+)
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    mode: str = "auto",
+    block_q: int = 256,
+    block_k: int = 256,
+    causal: bool = True,
+) -> jax.Array:
+    """Exact blocked softmax attention, (BH, S, dh) layout."""
+    use_pallas, interpret = _use_pallas(mode)
+    if not use_pallas:
+        return ref.flash_attention_ref(q, k, v, causal=causal)
+    return flash_attention_pallas(
+        q, k, v, block_q=block_q, block_k=block_k, causal=causal,
+        interpret=interpret,
+    )

@@ -1,0 +1,89 @@
+"""Pure-jnp oracles for every Pallas kernel (ground truth for allclose tests).
+
+Deliberately naive implementations — clarity over speed.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = [
+    "rff_features_ref",
+    "rff_attention_ref",
+    "rff_attention_state_ref",
+    "flash_attention_ref",
+]
+
+
+def rff_features_ref(x, w, b):
+    """sqrt(2/D) cos(x @ w + b) — oracle for kernels/rff_features.py."""
+    d = w.shape[1]
+    return jnp.sqrt(2.0 / d).astype(x.dtype) * jnp.cos(x @ w + b)
+
+
+def rff_attention_ref(phi_q, phi_k, v, normalize=True, eps=1e-6):
+    """Quadratic-form causal kernel attention — oracle for rff_attention.
+
+    o_t = sum_{s<=t} (phi_q_t . phi_k_s) v_s [/ normalizer]. Shapes as the
+    kernel: (BH, S, D), (BH, S, D), (BH, S, dv).
+    """
+    s = phi_q.shape[1]
+    a = jnp.einsum("btd,bsd->bts", phi_q, phi_k)
+    mask = jnp.tril(jnp.ones((s, s), a.dtype))
+    a = a * mask[None]
+    out = jnp.einsum("bts,bsv->btv", a, v)
+    if normalize:
+        denom = jnp.sum(a, axis=-1, keepdims=True)
+        out = out / (denom + eps)
+    return out
+
+
+def rff_attention_state_ref(phi_q, phi_k, v, normalize=True, eps=1e-6):
+    """Same computation via the fixed-size running state (recurrent oracle).
+
+    Returns (outputs, final_S (BH, D, dv), final_z (BH, D)) — validates the
+    state semantics the decode path relies on.
+    """
+    import jax
+
+    def per_head(q, k, vv):
+        def body(carry, qkv):
+            s_state, z_state = carry
+            qt, kt, vt = qkv
+            s_state = s_state + jnp.outer(kt, vt)
+            z_state = z_state + kt
+            num = qt @ s_state
+            if normalize:
+                num = num / (qt @ z_state + eps)
+            return (s_state, z_state), num
+
+        init = (
+            jnp.zeros((q.shape[-1], vv.shape[-1]), jnp.float32),
+            jnp.zeros((q.shape[-1],), jnp.float32),
+        )
+        (s_f, z_f), outs = jax.lax.scan(
+            body, init, (q.astype(jnp.float32), k.astype(jnp.float32), vv.astype(jnp.float32))
+        )
+        return outs.astype(q.dtype), s_f, z_f
+
+    import jax as _jax
+
+    return _jax.vmap(per_head)(phi_q, phi_k, v)
+
+
+def flash_attention_ref(q, k, v, causal=True):
+    """Exact softmax attention — oracle for kernels/flash_attention.py.
+
+    q, k: (BH, S, dh); v: (BH, S, dv).
+    """
+    dh = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * dh**-0.5
+    if causal:
+        n = q.shape[1]
+        mask = jnp.tril(jnp.ones((n, n), bool))
+        s = jnp.where(mask[None], s, -1e30)
+    import jax
+
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqk,bkv->bqv", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,120 @@
+"""Pallas TPU kernel: chunked causal linear attention over random features.
+
+This is the paper's fixed-size-state insight applied to attention (DESIGN.md
+§2): with kernelized attention weights ``kappa(q_t, k_s) ~= phi(q_t)^T
+phi(k_s)``, the causal attention output
+
+    o_t = sum_{s<=t} phi(q_t)^T phi(k_s) v_s   /   sum_{s<=t} phi(q_t)^T phi(k_s)
+
+is computable from a *fixed-size* running state ``S_t = sum phi(k_s) v_s^T in
+R^{D x dv}`` and ``z_t = sum phi(k_s) in R^D`` — the exact analogue of
+RFFKLMS's theta replacing the growing dictionary (here: the growing KV cache).
+
+TPU adaptation — *chunkwise-parallel* form, not a per-token scan:
+  * sequence is split into chunks of C tokens;
+  * intra-chunk term: ``(Q K^T ∘ causal_mask) V`` — three MXU GEMMs;
+  * inter-chunk term: ``Q @ S_prev`` — one MXU GEMM against the carried state;
+  * the state lives in VMEM scratch and carries across the (sequential) minor
+    grid dimension; each (batch*head) slice re-initializes it at chunk 0.
+
+Grid: ``(BH, S/C)`` — minor dim is the chunk index, so for each bh the chunks
+run in order while the state persists in scratch; different bh are
+independent (state re-init at c == 0).
+
+VMEM at defaults (C=256, D=256, dv=128, f32): q/k tiles 256KiB each, v 128KiB,
+state 128KiB + z 1KiB, A 256KiB → ≈ 1 MiB, well within budget.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["rff_attention_kernel", "rff_attention_pallas"]
+
+
+def rff_attention_kernel(
+    q_ref, k_ref, v_ref, o_ref, s_ref, z_ref, *, normalize: bool, eps: float
+):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        s_ref[...] = jnp.zeros_like(s_ref)
+        z_ref[...] = jnp.zeros_like(z_ref)
+
+    q = q_ref[0].astype(jnp.float32)  # (C, D)
+    k = k_ref[0].astype(jnp.float32)  # (C, D)
+    v = v_ref[0].astype(jnp.float32)  # (C, dv)
+
+    cs = q.shape[0]
+    # Causal mask including the diagonal (token attends to itself).
+    row = jax.lax.broadcasted_iota(jnp.int32, (cs, cs), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (cs, cs), 1)
+    mask = (row >= col).astype(jnp.float32)
+
+    a = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * mask  # (C, C)
+    out = jnp.dot(a, v, preferred_element_type=jnp.float32)  # intra
+    out += jnp.dot(q, s_ref[...], preferred_element_type=jnp.float32)  # inter
+
+    if normalize:
+        denom = jnp.sum(a, axis=-1) + jnp.dot(
+            q, z_ref[...][0], preferred_element_type=jnp.float32
+        )
+        out = out / (denom + eps)[:, None]
+
+    o_ref[0] = out.astype(o_ref.dtype)
+
+    # State update AFTER emitting this chunk's outputs.
+    s_ref[...] += jnp.dot(k.T, v, preferred_element_type=jnp.float32)
+    z_ref[...] += jnp.sum(k, axis=0)[None, :]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("chunk", "normalize", "eps", "interpret"),
+)
+def rff_attention_pallas(
+    phi_q: jax.Array,
+    phi_k: jax.Array,
+    v: jax.Array,
+    *,
+    chunk: int = 256,
+    normalize: bool = True,
+    eps: float = 1e-6,
+    interpret: bool = False,
+) -> jax.Array:
+    """Causal linear attention.
+
+    Args:
+      phi_q, phi_k: ``(BH, S, D)`` feature-mapped queries/keys (non-negative
+        when ``normalize=True`` — use positive random features).
+      v: ``(BH, S, dv)`` values.
+
+    Returns:
+      ``(BH, S, dv)`` attention outputs.
+    """
+    bh, s, d = phi_q.shape
+    dv = v.shape[-1]
+    c = min(chunk, s)
+    assert s % c == 0, f"seq {s} must be divisible by chunk {c}"
+    grid = (bh, s // c)
+    return pl.pallas_call(
+        functools.partial(rff_attention_kernel, normalize=normalize, eps=eps),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, c, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, c, d), lambda b, i: (b, i, 0)),
+            pl.BlockSpec((1, c, dv), lambda b, i: (b, i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, c, dv), lambda b, i: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, dv), phi_q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((d, dv), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(phi_q, phi_k, v)

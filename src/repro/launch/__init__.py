@@ -1,0 +1,4 @@
+"""Launchers: production mesh, sharding rules, dry-run, train/serve CLIs."""
+from repro.launch.mesh import data_axes, make_production_mesh
+
+__all__ = ["make_production_mesh", "data_axes"]

@@ -1,0 +1,31 @@
+"""Production meshes.
+
+Single pod: (16, 16) = 256 chips, axes ("data", "model").
+Multi-pod:  (2, 16, 16) = 512 chips, axes ("pod", "data", "model") — the
+"pod" axis is an outer data/FSDP axis; cross-pod traffic is gradient
+reduction (DCN), intra-pod is TP/EP/FSDP (ICI).
+
+Defined as functions so importing this module never touches jax device
+state (the dry-run must set XLA_FLAGS before first jax init).
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "data_axes", "DP_AXES", "MODEL_AXIS"]
+
+MODEL_AXIS = "model"
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:
+    """All data-parallel-like axes (everything except the model axis)."""
+    return tuple(a for a in mesh.axis_names if a != MODEL_AXIS)
+
+
+DP_AXES = data_axes  # alias

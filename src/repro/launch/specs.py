@@ -1,0 +1,143 @@
+"""ShapeDtypeStruct input stand-ins + shardings for every (arch x shape) cell.
+
+``input_specs`` builds exactly what the dry-run lowers against: weak-type-
+correct, shardable, zero device allocation. ``resolve_cell`` applies the
+long_500k policy (RFF substitution for full-attention archs — the paper's
+technique; DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import SHAPES, ModelConfig, ShapeSpec
+from repro.launch.mesh import data_axes
+from repro.launch.sharding import batch_specs, decode_state_specs
+from repro.models import transformer
+
+__all__ = [
+    "resolve_cell",
+    "input_specs",
+    "input_shardings",
+    "dp_size",
+    "train_batch_axes",
+]
+
+
+def dp_size(mesh: Mesh) -> int:
+    n = 1
+    for a in data_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def train_batch_axes(
+    cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh
+) -> tuple[str, ...]:
+    """Mesh axes the batch dim is sharded over.
+
+    TP mode: the data-like axes. DP mode: greedily extend over every axis
+    (pod, data, model) while the global batch stays divisible — for tiny
+    archs the model axis carries batch instead of tensor shards.
+    """
+    if cfg.preferred_parallelism in ("dp", "fsdp") and shape.kind in ("train", "prefill"):
+        axes: list[str] = []
+        prod = 1
+        for a in mesh.axis_names:
+            if shape.global_batch % (prod * mesh.shape[a]) == 0:
+                axes.append(a)
+                prod *= mesh.shape[a]
+        return tuple(axes)
+    dp = data_axes(mesh)
+    prod = 1
+    axes = []
+    for a in dp:
+        if shape.global_batch % (prod * mesh.shape[a]) == 0:
+            axes.append(a)
+            prod *= mesh.shape[a]
+    return tuple(axes)
+
+
+def resolve_cell(cfg: ModelConfig, shape: ShapeSpec) -> tuple[ModelConfig, str]:
+    """Apply per-cell policy. Returns (possibly modified cfg, note)."""
+    note = "native"
+    if shape.name == "long_500k" and cfg.mixer == "attention":
+        if cfg.attention in ("gqa", "mla") and cfg.rff_long_context:
+            cfg = transformer.with_rff_attention(cfg)
+            note = "rff-substituted (paper technique: fixed-size state replaces KV cache)"
+    if shape.kind != "train" and cfg.zero_stage >= 3:
+        # no optimizer state at serve time: drop ZeRO-3 (per-use weight
+        # gathers would repeat every decoded token) for a gather-free
+        # 2D expert layout.
+        cfg = replace(cfg, zero_stage=1, expert_2d_shard=True)
+        note += " + serve=2d-expert-shard"
+    if shape.kind == "train" and cfg.train_parallelism:
+        # training deployment mapping; head padding exists only for the TP
+        # head-axis shard and is dropped with it (train/serve layout
+        # conversion is a reshape, noted in DESIGN.md).
+        kw = dict(preferred_parallelism=cfg.train_parallelism)
+        if cfg.train_parallelism in ("dp", "fsdp"):
+            kw["pad_heads_to"] = 0
+        cfg = replace(cfg, **kw)
+        note += f" + train={cfg.preferred_parallelism}"
+    return cfg, note
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> dict[str, Any]:
+    """ShapeDtypeStruct batch for one cell (tokens or stub-frontend embeds)."""
+    b, s = shape.global_batch, shape.seq_len
+    tok_dt = jnp.int32
+    emb_dt = jnp.dtype(cfg.dtype)
+    if shape.kind in ("train", "prefill"):
+        if cfg.frontend:
+            batch = {
+                "embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), emb_dt),
+            }
+            if shape.kind == "train":
+                batch["labels"] = jax.ShapeDtypeStruct((b, s), tok_dt)
+        else:
+            batch = {"tokens": jax.ShapeDtypeStruct((b, s), tok_dt)}
+        return batch
+    # decode: one new token against a seq_len-deep context state
+    if cfg.frontend:
+        return {"embed": jax.ShapeDtypeStruct((b, 1, cfg.d_model), emb_dt)}
+    return {"token": jax.ShapeDtypeStruct((b,), tok_dt)}
+
+
+def input_shardings(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh) -> dict[str, Any]:
+    if shape.kind in ("train", "prefill"):
+        baxes = train_batch_axes(cfg, shape, mesh) or None
+    else:
+        bspec = batch_specs(mesh, batch=shape.global_batch, kind=shape.kind)
+        baxes = bspec[0] if len(bspec) else None
+
+    out = {}
+    for name in input_specs(cfg, shape):
+        if name in ("tokens", "labels"):
+            out[name] = NamedSharding(mesh, P(baxes, None))
+        elif name == "embeds":
+            out[name] = NamedSharding(mesh, P(baxes, None, None))
+        elif name == "token":
+            out[name] = NamedSharding(mesh, P(baxes))
+        elif name == "embed":
+            out[name] = NamedSharding(mesh, P(baxes, None, None))
+    return out
+
+
+def decode_state_shape(cfg: ModelConfig, shape: ShapeSpec) -> Any:
+    """abstract decode-state pytree for a cell (no allocation)."""
+    return jax.eval_shape(
+        lambda: transformer.decode_state_init(
+            cfg, shape.global_batch, max_len=shape.seq_len
+        )
+    )
+
+
+def decode_state_shardings(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh) -> Any:
+    st_shape = decode_state_shape(cfg, shape)
+    specs = decode_state_specs(cfg, mesh, st_shape, shape.global_batch)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)

@@ -1,0 +1,70 @@
+"""Production training launcher.
+
+On a real TPU slice this binary runs under `jax.distributed` with the
+production mesh; on this CPU container it runs the same code path on the
+local device(s) (use --force-devices N to simulate a small mesh).
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b \
+        --steps 200 --batch 8 --seq 64 --ckpt-dir checkpoints/qwen
+
+Restart the same command after a kill to resume from the newest checkpoint.
+"""
+import argparse
+import os
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--micro", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default="checkpoints/launch_train")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--force-devices", type=int, default=0,
+                    help="force N host devices (set before jax init)")
+    args = ap.parse_args()
+
+    if args.force_devices:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.force_devices}"
+        )
+
+    from repro.configs import get_config
+    from repro.data.lm_data import batch_at_step
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+
+    def batch_fn(step):
+        return {
+            "tokens": batch_at_step(
+                0, step, global_batch=args.batch, seq_len=args.seq,
+                vocab=cfg.vocab_size,
+            )
+        }
+
+    trainer = Trainer(
+        cfg,
+        TrainerConfig(
+            total_steps=args.steps,
+            ckpt_every=args.ckpt_every,
+            ckpt_dir=args.ckpt_dir,
+            num_microbatches=args.micro,
+            peak_lr=args.lr,
+        ),
+        batch_fn,
+    )
+    metrics = trainer.run()
+    print(f"done: {metrics}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

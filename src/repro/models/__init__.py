@@ -1,0 +1,25 @@
+"""LM substrate: unified decoder covering all assigned architecture families."""
+from repro.models import attention, layers, moe, rff_attention, rglru, ssm
+from repro.models.transformer import (
+    decode_state_init,
+    decode_step,
+    forward,
+    init_params,
+    lm_loss,
+    with_rff_attention,
+)
+
+__all__ = [
+    "attention",
+    "layers",
+    "moe",
+    "rff_attention",
+    "rglru",
+    "ssm",
+    "decode_state_init",
+    "decode_step",
+    "forward",
+    "init_params",
+    "lm_loss",
+    "with_rff_attention",
+]

@@ -1,0 +1,439 @@
+"""Attention blocks: GQA with flash-style blocked softmax, local (sliding
+window) attention, MLA (multi-head latent attention), and cache-based decode.
+
+The blocked softmax (lax.scan over KV chunks with running max/normalizer)
+keeps prefill memory at O(S · block) instead of O(S^2) — required for the
+32k-prefill shapes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig, ModelConfig
+from repro.models.layers import apply_rope, dense, dense_init, rope_freqs
+
+__all__ = [
+    "gqa_init",
+    "gqa_apply",
+    "gqa_decode",
+    "mla_init",
+    "mla_apply",
+    "KVCache",
+    "flash_attention",
+]
+
+NEG_INF = -1e30
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, S_max, Hkv, dh)
+    v: jax.Array  # (B, S_max, Hkv, dh)
+    pos: jax.Array  # () int32 — next write position
+
+
+# ---------------------------------------------------------------------------
+# Head-structured projections: weights are (d, H, dh) / (H, dh, d) so the
+# HEAD axis is a real tensor dim — TP shards whole heads and can never split
+# a head interior (which would turn attention contractions into partial sums
+# and all-reduce score-sized tensors; observed before this layout).
+# ---------------------------------------------------------------------------
+
+
+def head_proj_init(
+    key: jax.Array, d: int, heads: int, head_dim: int, *, bias: bool = False,
+    dtype=jnp.float32,
+) -> dict:
+    p = {"w": (jax.random.normal(key, (d, heads, head_dim)) * d**-0.5).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((heads, head_dim), dtype)
+    return p
+
+
+def head_proj(p: dict, x: jax.Array) -> jax.Array:
+    """(..., d) -> (..., H, dh)."""
+    y = jnp.einsum("...d,dhe->...he", x, p["w"])
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def head_out_init(
+    key: jax.Array, heads: int, head_dim: int, d: int, dtype=jnp.float32
+) -> dict:
+    scale = (heads * head_dim) ** -0.5
+    return {"w": (jax.random.normal(key, (heads, head_dim, d)) * scale).astype(dtype)}
+
+
+def head_out(p: dict, x: jax.Array) -> jax.Array:
+    """(..., H, dh) -> (..., d)."""
+    return jnp.einsum("...he,hed->...d", x, p["w"])
+
+
+def repeat_kv(k: jax.Array, num_heads: int) -> jax.Array:
+    """Expand (B, S, Hkv, dh) -> (B, S, H, dh) by group repetition (GQA)."""
+    hkv = k.shape[2]
+    if hkv == num_heads:
+        return k
+    return jnp.repeat(k, num_heads // hkv, axis=2)
+
+
+def head_mask(cfg: ModelConfig, dtype=jnp.float32) -> Optional[jax.Array]:
+    """(Hp, 1) constant mask zeroing inert padding heads (see ModelConfig
+    ``pad_heads_to``): masking before the output projection keeps both the
+    function and all gradients identical to the unpadded architecture."""
+    hp = cfg.padded_heads
+    if hp == cfg.num_heads:
+        return None
+    m = jnp.concatenate(
+        [jnp.ones((cfg.num_heads,), dtype), jnp.zeros((hp - cfg.num_heads,), dtype)]
+    )
+    return m[:, None]
+
+
+def apply_head_mask(x: jax.Array, mask: Optional[jax.Array]) -> jax.Array:
+    """x: (..., H, dh) * mask (H, 1)."""
+    if mask is None:
+        return x
+    return x * mask.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Blocked-softmax attention (flash-style, pure XLA)
+# ---------------------------------------------------------------------------
+
+
+def dense_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_offset: int = 0,
+    kv_len: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Plain masked softmax attention (scores materialized once).
+
+    Used for training-length sequences: under autodiff a scanned
+    online-softmax stores per-block residuals for the backward pass, which
+    is strictly worse than one materialized score tensor (observed: the scan
+    carries stacked (blocks, ...) score residuals through the grad). XLA:TPU
+    fuses this form well; the scanned form below is for long forward-only
+    prefill.
+    """
+    b, sq, h, dh = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    group = h // hkv
+    qg = (q.astype(jnp.float32) * dh**-0.5).reshape(b, sq, hkv, group, dh)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32))
+    qpos = q_offset + jnp.arange(sq)
+    kpos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window:
+        mask &= qpos[:, None] - kpos[None, :] < window
+    if kv_len is not None:
+        mask &= kpos[None, :] < kv_len
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bkhv->bqhgv", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, hkv * group, dv).astype(q.dtype)
+
+
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    block_k: int = 1024,
+    q_offset: int = 0,
+    kv_len: Optional[jax.Array] = None,
+    dense_threshold: int = 8192,
+) -> jax.Array:
+    """Attention dispatcher: dense path for short sequences (train-friendly
+    autodiff), blocked online-softmax scan for long forward-only contexts.
+
+    Args:
+      q: ``(B, Sq, H, dh)``; k, v: ``(B, Sk, Hkv, dh)`` (GQA: H % Hkv == 0).
+      causal: apply causal mask with query positions offset by ``q_offset``.
+      window: if > 0, sliding-window (local) attention of this width.
+      block_k: KV chunk size for the scan.
+      kv_len: optional dynamic KV validity length (decode: cache fill level).
+
+    Returns ``(B, Sq, H, dh)``.
+    """
+    # TPU fast path: the Pallas flash kernel covers the plain full-sequence
+    # causal MHA case (kv already group-repeated, no window/kv_len) — the
+    # train/prefill hot spot. All other cases use the XLA paths below.
+    if (
+        jax.default_backend() == "tpu"
+        and causal
+        and not window
+        and kv_len is None
+        and q_offset == 0
+        and q.shape == k.shape
+        and q.shape[1] == k.shape[1]
+    ):
+        from repro.kernels.ops import flash_attention as flash_kernel
+
+        b, s, h, dh = q.shape
+        bq = min(512, s)
+        if s % bq == 0:
+            def bh(x):
+                return x.transpose(0, 2, 1, 3).reshape(b * h, s, x.shape[-1])
+
+            out = flash_kernel(bh(q), bh(k), bh(v), block_q=bq, block_k=bq)
+            return (
+                out.reshape(b, h, s, v.shape[-1]).transpose(0, 2, 1, 3)
+            )
+
+    if k.shape[1] <= dense_threshold:
+        return dense_attention(
+            q, k, v, causal=causal, window=window, q_offset=q_offset,
+            kv_len=kv_len,
+        )
+    b, sq, h, dh = q.shape
+    sk, hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    group = h // hkv
+    scale = dh**-0.5
+    bk = min(block_k, sk)
+    nblocks = -(-sk // bk)
+    pad = nblocks * bk - sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    q32 = q.astype(jnp.float32) * scale
+    # (B, Hkv, group, Sq, dh)
+    qg = q32.reshape(b, sq, hkv, group, dh).transpose(0, 2, 3, 1, 4)
+    kb = k.reshape(b, nblocks, bk, hkv, dh).transpose(1, 0, 3, 2, 4)
+    vb = v.reshape(b, nblocks, bk, hkv, dv).transpose(1, 0, 3, 2, 4)
+
+    qpos = q_offset + jnp.arange(sq)
+
+    def body(carry, inp):
+        m, l, acc = carry  # (B,Hkv,g,Sq), same, (B,Hkv,g,Sq,dh)
+        kblk, vblk, blk_idx = inp  # (B,Hkv,bk,dh) x2, ()
+        kpos = blk_idx * bk + jnp.arange(bk)
+        s = jnp.einsum(
+            "bhgqd,bhkd->bhgqk", qg, kblk.astype(jnp.float32)
+        )  # (B,Hkv,g,Sq,bk)
+        mask = jnp.ones((sq, bk), bool)
+        if causal:
+            mask &= qpos[:, None] >= kpos[None, :]
+        if window:
+            mask &= qpos[:, None] - kpos[None, :] < window
+        mask &= kpos[None, :] < (sk if kv_len is None else kv_len)
+        s = jnp.where(mask, s, NEG_INF)
+        m_blk = jnp.max(s, axis=-1)
+        m_new = jnp.maximum(m, m_blk)
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p, vblk.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new), None
+
+    init = (
+        jnp.full((b, hkv, group, sq), NEG_INF, jnp.float32),
+        jnp.zeros((b, hkv, group, sq), jnp.float32),
+        jnp.zeros((b, hkv, group, sq, dv), jnp.float32),
+    )
+    (m, l, acc), _ = jax.lax.scan(body, init, (kb, vb, jnp.arange(nblocks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, dv)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA block
+# ---------------------------------------------------------------------------
+
+
+def gqa_init(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d, hp, hkv = cfg.d_model, cfg.padded_heads, cfg.num_kv_heads
+    dh = cfg.resolved_head_dim
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    return {
+        "wq": head_proj_init(kq, d, hp, dh, bias=cfg.qkv_bias, dtype=dtype),
+        "wk": head_proj_init(kk, d, hkv, dh, bias=cfg.qkv_bias, dtype=dtype),
+        "wv": head_proj_init(kv, d, hkv, dh, bias=cfg.qkv_bias, dtype=dtype),
+        "wo": head_out_init(ko, hp, dh, d, dtype=dtype),
+    }
+
+
+def _project_qkv(p, cfg: ModelConfig, x, positions):
+    dh = cfg.resolved_head_dim
+    q = head_proj(p["wq"], x)  # (B, S, Hp, dh)
+    k = head_proj(p["wk"], x)  # (B, S, Hkv, dh)
+    v = head_proj(p["wv"], x)
+    cos, sin = rope_freqs(positions, dh, cfg.rope_theta)
+    return apply_rope(q, cos, sin), apply_rope(k, cos, sin), v
+
+
+def gqa_apply(
+    p: dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    *,
+    window: int = 0,
+    block_k: int = 1024,
+) -> jax.Array:
+    """Full-sequence causal (optionally windowed) GQA. x: (B, S, d)."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    # kv repeated to full (padded) heads as activations: per-head einsums
+    # stay local under head sharding (cheap-kv-projection / shardable-q).
+    k = repeat_kv(k, cfg.padded_heads)
+    v = repeat_kv(v, cfg.padded_heads)
+    out = flash_attention(q, k, v, causal=True, window=window, block_k=block_k)
+    return head_out(p["wo"], apply_head_mask(out, head_mask(cfg)))
+
+
+def gqa_decode(
+    p: dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    cache: KVCache,
+    *,
+    window: int = 0,
+) -> tuple[jax.Array, KVCache]:
+    """One-token decode against a KV cache (stored unrepeated; the cache is
+    sequence-sharded over the model axis — decode context parallelism)."""
+    b = x.shape[0]
+    positions = cache.pos[None, None] + jnp.zeros((b, 1), jnp.int32)
+    q, k_new, v_new = _project_qkv(p, cfg, x, positions)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new, cache.pos, 1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new, cache.pos, 1)
+    out = dense_attention(
+        q,
+        k_cache,
+        v_cache,
+        causal=False,  # validity handled via kv_len
+        window=window,
+        kv_len=cache.pos + 1,
+    )
+    new_cache = KVCache(k=k_cache, v=v_cache, pos=cache.pos + 1)
+    return head_out(p["wo"], apply_head_mask(out, head_mask(cfg))), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 / MiniCPM3 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+
+def mla_init(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    m: MLAConfig = cfg.mla
+    d, h = cfg.d_model, cfg.padded_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    keys = jax.random.split(key, 6)
+    p = {
+        # shared latent paths (2D) + head-structured up-projections (3D)
+        "w_dkv": dense_init(keys[0], d, m.kv_lora_rank, dtype=dtype),
+        "w_kr": dense_init(keys[1], d, m.qk_rope_head_dim, dtype=dtype),
+        "w_ukv": head_proj_init(
+            keys[2], m.kv_lora_rank, h, m.qk_nope_head_dim + m.v_head_dim,
+            dtype=dtype,
+        ),
+        "wo": head_out_init(keys[3], h, m.v_head_dim, d, dtype=dtype),
+    }
+    if m.q_lora_rank:
+        p["w_dq"] = dense_init(keys[4], d, m.q_lora_rank, dtype=dtype)
+        p["w_uq"] = head_proj_init(keys[5], m.q_lora_rank, h, qk, dtype=dtype)
+    else:
+        p["wq"] = head_proj_init(keys[4], d, h, qk, dtype=dtype)
+    return p
+
+
+def mla_apply(
+    p: dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    *,
+    block_k: int = 1024,
+) -> jax.Array:
+    """Full-sequence causal MLA. x: (B, S, d)."""
+    m: MLAConfig = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.padded_heads
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    positions = jnp.arange(s)[None, :]
+
+    if m.q_lora_rank:
+        q = head_proj(p["w_uq"], dense(p["w_dq"], x))
+    else:
+        q = head_proj(p["wq"], x)  # (B, S, H, dn+dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+
+    c_kv = dense(p["w_dkv"], x)  # (B, S, r)
+    kv = head_proj(p["w_ukv"], c_kv)  # (B, S, H, dn+dv)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    k_rope = dense(p["w_kr"], x).reshape(b, s, 1, dr)  # shared across heads
+
+    cos, sin = rope_freqs(positions, dr, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+    k_rope = apply_rope(k_rope, cos, sin)
+    k_rope = jnp.broadcast_to(k_rope, (b, s, h, dr))
+
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k_full = jnp.concatenate([k_nope, k_rope], axis=-1)
+    out = flash_attention(q_full, k_full, v, causal=True, block_k=block_k)
+    return head_out(p["wo"], apply_head_mask(out, head_mask(cfg)))
+
+
+class MLACache(NamedTuple):
+    """Latent cache: per-token compressed KV (r) + rope key — the MLA
+    memory win: cache is (r + dr) per token instead of 2·H·dh."""
+
+    c_kv: jax.Array  # (B, S_max, r)
+    k_rope: jax.Array  # (B, S_max, dr)
+    pos: jax.Array
+
+
+def mla_decode(
+    p: dict, cfg: ModelConfig, x: jax.Array, cache: MLACache
+) -> tuple[jax.Array, MLACache]:
+    """One-token MLA decode from the latent cache (sequence-sharded)."""
+    m: MLAConfig = cfg.mla
+    b = x.shape[0]
+    h = cfg.padded_heads
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+    positions = cache.pos[None, None] + jnp.zeros((b, 1), jnp.int32)
+
+    if m.q_lora_rank:
+        q = head_proj(p["w_uq"], dense(p["w_dq"], x))
+    else:
+        q = head_proj(p["wq"], x)  # (B, 1, H, dn+dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    cos, sin = rope_freqs(positions, dr, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos, sin)
+
+    c_new = dense(p["w_dkv"], x)  # (B, 1, r)
+    kr_new = dense(p["w_kr"], x)  # (B, 1, dr)
+    kr_new = apply_rope(kr_new[:, :, None, :], cos, sin)[:, :, 0]
+    c_kv = jax.lax.dynamic_update_slice_in_dim(cache.c_kv, c_new, cache.pos, 1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(cache.k_rope, kr_new, cache.pos, 1)
+
+    # Expand latents for attention (weight-absorbed decode is the §Perf
+    # optimization; the paper-faithful baseline expands then dots).
+    s_max = c_kv.shape[1]
+    kv = head_proj(p["w_ukv"], c_kv)  # (B, S, H, dn+dv)
+    k_nope, v = kv[..., :dn], kv[..., dn:]
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (b, s_max, h, dr))], -1
+    )
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    out = dense_attention(q_full, k_full, v, causal=False, kv_len=cache.pos + 1)
+    new_cache = MLACache(c_kv=c_kv, k_rope=k_rope, pos=cache.pos + 1)
+    return head_out(p["wo"], apply_head_mask(out, head_mask(cfg))), new_cache

@@ -1,0 +1,25 @@
+"""Stub modality frontends (per assignment: backbone only, frontend = STUB).
+
+For ``[vlm]`` (internvl2) and ``[audio]`` (musicgen) the transformer consumes
+*precomputed* patch/frame embeddings. ``input_specs()`` in the launcher emits
+``(B, S, d_model)`` embedding stand-ins; these helpers generate random but
+shape-correct embeddings for smoke tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+__all__ = ["stub_embeddings"]
+
+
+def stub_embeddings(
+    key: jax.Array, cfg: ModelConfig, batch: int, seq: int
+) -> jax.Array:
+    """Random unit-scale embeddings standing in for ViT patches / EnCodec
+    frames. (B, S, d_model)."""
+    return jax.random.normal(key, (batch, seq, cfg.d_model), jnp.float32) * (
+        cfg.d_model**-0.5
+    )

@@ -1,0 +1,95 @@
+"""Functional building blocks (param dicts + pure apply fns).
+
+No framework dependency: parameters are nested dicts of jnp arrays, inits are
+explicit, apply functions are pure — trivially compatible with jit / scan /
+GSPMD sharding.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "dense_init",
+    "dense",
+    "rmsnorm_init",
+    "rmsnorm",
+    "embed_init",
+    "glu_mlp_init",
+    "glu_mlp",
+    "rope_freqs",
+    "apply_rope",
+]
+
+
+def dense_init(
+    key: jax.Array,
+    d_in: int,
+    d_out: int,
+    *,
+    bias: bool = False,
+    dtype=jnp.float32,
+    scale: float | None = None,
+) -> dict:
+    scale = scale if scale is not None else d_in**-0.5
+    p = {"w": (scale * jax.random.normal(key, (d_in, d_out))).astype(dtype)}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def dense(p: dict, x: jax.Array) -> jax.Array:
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return ((x32 * jax.lax.rsqrt(var + eps)) * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def embed_init(key: jax.Array, vocab: int, d: int, dtype=jnp.float32) -> dict:
+    return {"table": (jax.random.normal(key, (vocab, d)) * d**-0.5).astype(dtype)}
+
+
+def glu_mlp_init(key: jax.Array, d: int, d_ff: int, dtype=jnp.float32) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi": dense_init(k1, d, d_ff, dtype=dtype),
+        "wg": dense_init(k2, d, d_ff, dtype=dtype),
+        "wo": dense_init(k3, d_ff, d, dtype=dtype),
+    }
+
+
+def glu_mlp(p: dict, x: jax.Array) -> jax.Array:
+    """SwiGLU feed-forward."""
+    return dense(p["wo"], jax.nn.silu(dense(p["wg"], x)) * dense(p["wi"], x))
+
+
+def rope_freqs(
+    positions: jax.Array, head_dim: int, theta: float = 10_000.0
+) -> tuple[jax.Array, jax.Array]:
+    """Rotary cos/sin tables for integer positions ``(...,)`` -> ``(..., hd/2)``."""
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq  # (..., half)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    """Rotate pairs. x: (..., S, H, hd); cos/sin: (..., S, hd/2)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    c = cos[..., None, :]  # broadcast over heads
+    s = sin[..., None, :]
+    return jnp.concatenate([x1 * c - x2 * s, x1 * s + x2 * c], axis=-1).astype(
+        x.dtype
+    )

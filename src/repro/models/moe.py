@@ -1,0 +1,109 @@
+"""Mixture-of-Experts FFN — GShard-style capacity-based einsum dispatch.
+
+Fully jit/GSPMD-compatible (no ragged ops): experts are a stacked weight
+tensor sharded over the ``model`` axis (expert parallelism); the dispatch and
+combine einsums induce the all-to-all traffic that shows up in the roofline's
+collective term.
+
+Supports DeepSeek-style shared experts (always-on) and Arctic-style parallel
+dense residual FFN.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, MoEConfig
+from repro.models.layers import dense_init, glu_mlp, glu_mlp_init
+
+__all__ = ["moe_init", "moe_apply"]
+
+
+def _expert_stack_init(key, n: int, d: int, dff: int, dtype) -> dict:
+    """Stacked gated-MLP experts: (E, d, ff) x2 and (E, ff, d)."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    s_in = d**-0.5
+    s_out = dff**-0.5
+    return {
+        "wi": (s_in * jax.random.normal(k1, (n, d, dff))).astype(dtype),
+        "wg": (s_in * jax.random.normal(k2, (n, d, dff))).astype(dtype),
+        "wo": (s_out * jax.random.normal(k3, (n, dff, d))).astype(dtype),
+    }
+
+
+def moe_init(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    m: MoEConfig = cfg.moe
+    d = cfg.d_model
+    kr, ke, ks, kd = jax.random.split(key, 4)
+    p = {
+        "router": dense_init(kr, d, m.num_experts, dtype=jnp.float32),
+        "experts": _expert_stack_init(ke, m.num_experts, d, m.d_ff_expert, dtype),
+    }
+    if m.num_shared:
+        p["shared"] = glu_mlp_init(ks, d, m.num_shared * m.d_ff_expert, dtype)
+    if m.dense_residual_ff:
+        p["dense_residual"] = glu_mlp_init(kd, d, m.dense_residual_ff, dtype)
+    return p
+
+
+def _dispatch_combine(gates: jax.Array, top_k: int, capacity: int):
+    """Top-k capacity assignment.
+
+    Args:
+      gates: (B, S, E) softmax router probabilities.
+
+    Returns:
+      dispatch (B, S, E, C) one-hot-ish bool->dtype, combine (B, S, E, C)
+      gate-weighted. Built k-slice at a time to avoid a (B,S,k,E,C) blow-up.
+    """
+    b, s, e = gates.shape
+    topv, topi = jax.lax.top_k(gates, top_k)  # (B, S, k)
+    # Normalize the k selected gates (standard for k>1 routers).
+    topv = topv / jnp.maximum(jnp.sum(topv, -1, keepdims=True), 1e-9)
+
+    dispatch = jnp.zeros((b, s, e, capacity), gates.dtype)
+    combine = jnp.zeros((b, s, e, capacity), gates.dtype)
+    # Running per-expert fill count, accumulated across k slices so slot
+    # assignment is collision-free.
+    fill = jnp.zeros((b, e), jnp.int32)
+    for j in range(top_k):
+        idx = topi[:, :, j]  # (B, S)
+        gate = topv[:, :, j]  # (B, S)
+        onehot = jax.nn.one_hot(idx, e, dtype=jnp.int32)  # (B, S, E)
+        # position of each token within its expert queue (token order)
+        prior = jnp.cumsum(onehot, axis=1) - onehot + fill[:, None, :]
+        pos = jnp.sum(prior * onehot, axis=-1)  # (B, S)
+        keep = pos < capacity
+        slot = jax.nn.one_hot(jnp.where(keep, pos, capacity), capacity,
+                              dtype=gates.dtype)[..., :capacity]
+        d_j = onehot.astype(gates.dtype)[..., None] * slot[:, :, None, :]
+        dispatch = dispatch + d_j
+        combine = combine + d_j * gate[:, :, None, None]
+        fill = fill + jnp.sum(onehot, axis=1)
+    return dispatch, combine
+
+
+def moe_apply(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """MoE FFN. x: (B, S, d) -> (B, S, d)."""
+    m: MoEConfig = cfg.moe
+    b, s, d = x.shape
+    logits = (x.astype(jnp.float32) @ p["router"]["w"])  # (B, S, E)
+    gates = jax.nn.softmax(logits, axis=-1)
+    capacity = max(
+        1, int(m.top_k * s * m.capacity_factor / m.num_experts)
+    )
+    dispatch, combine = _dispatch_combine(gates.astype(x.dtype), m.top_k, capacity)
+
+    # (E, B, C, d): tokens grouped per expert — the all-to-all einsum.
+    xe = jnp.einsum("bsd,bsec->ebcd", x, dispatch)
+    hi = jnp.einsum("ebcd,edf->ebcf", xe, p["experts"]["wi"])
+    hg = jnp.einsum("ebcd,edf->ebcf", xe, p["experts"]["wg"])
+    he = jax.nn.silu(hg) * hi
+    ye = jnp.einsum("ebcf,efd->ebcd", he, p["experts"]["wo"])
+    y = jnp.einsum("ebcd,bsec->bsd", ye, combine)
+
+    if m.num_shared:
+        y = y + glu_mlp(p["shared"], x)
+    if m.dense_residual_ff:
+        y = y + glu_mlp(p["dense_residual"], x)
+    return y

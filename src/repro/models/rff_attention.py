@@ -1,0 +1,176 @@
+"""RFF linear attention — the paper's technique as a first-class layer.
+
+Softmax attention is a kernel machine whose dictionary (the KV cache) grows
+with context length; following the paper, we replace the kernel trick with an
+explicit random-feature map and obtain a *fixed-size* state per head:
+
+    S_t = sum_{s<=t} phi(k_s) v_s^T   (D x dv)      "theta of the layer"
+    z_t = sum_{s<=t} phi(k_s)         (D,)
+
+Full-sequence form runs through the chunked Pallas kernel
+(`repro.kernels.rff_attention`); decode is an O(D dv) state update — O(1) in
+context length, which is what makes the 524k-token decode cell lowerable.
+
+Feature maps: "prf" (positive random features, unbiased softmax-kernel
+estimator — default) or "trig" (the paper's cos features, Gaussian-kernel).
+The random projections are *non-trainable* buffers derived from a fixed seed,
+exactly like the paper's Omega.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.rff import RFF, positive_random_features, rff_features, sample_prf, sample_rff
+from repro.kernels import ops
+from repro.models.layers import apply_rope, dense, dense_init, rope_freqs
+
+__all__ = [
+    "rff_attn_init",
+    "rff_attn_apply",
+    "rff_attn_decode",
+    "RFFState",
+    "rff_state_init",
+]
+
+
+class RFFState(NamedTuple):
+    s: jax.Array  # (B, H, D, dv) running sum phi(k) v^T
+    z: jax.Array  # (B, H, D) running sum phi(k)
+    pos: jax.Array  # () int32
+
+
+def rff_attn_init(
+    key: jax.Array, cfg: ModelConfig, dtype=jnp.float32
+) -> dict:
+    """Projections + fixed random features (per-layer Omega buffer)."""
+    d, h = cfg.d_model, cfg.padded_heads
+    dh = cfg.resolved_head_dim
+    kq, kk, kv, ko, kf = jax.random.split(key, 5)
+    feat = sample_prf(kf, dh, cfg.rff_num_features, dtype=jnp.float32)
+    from repro.models.attention import head_out_init, head_proj_init
+
+    return {
+        "wq": head_proj_init(kq, d, h, dh, dtype=dtype),
+        "wk": head_proj_init(kk, d, h, dh, dtype=dtype),
+        "wv": head_proj_init(kv, d, h, dh, dtype=dtype),
+        "wo": head_out_init(ko, h, dh, d, dtype=dtype),
+        # non-trainable buffers (stop_gradient applied at use sites)
+        "omega": feat.omega,
+        "bias": feat.bias,
+    }
+
+
+def _feature(p: dict, x: jax.Array, kind: str) -> jax.Array:
+    rff = RFF(
+        omega=jax.lax.stop_gradient(p["omega"]).astype(jnp.float32),
+        bias=jax.lax.stop_gradient(p["bias"]).astype(jnp.float32),
+    )
+    x32 = x.astype(jnp.float32)
+    if kind == "trig":
+        return rff_features(rff, x32)
+    return positive_random_features(rff, x32)
+
+
+def _project(p, cfg: ModelConfig, x, positions):
+    from repro.models.attention import head_proj
+
+    dh = cfg.resolved_head_dim
+    q = head_proj(p["wq"], x)  # (B, S, H, dh)
+    k = head_proj(p["wk"], x)
+    v = head_proj(p["wv"], x)
+    cos, sin = rope_freqs(positions, dh, cfg.rope_theta)
+    # RoPE before the feature map: kernel of the rotated vectors — relative-
+    # position-aware kernel attention.
+    return apply_rope(q, cos, sin), apply_rope(k, cos, sin), v
+
+
+def rff_attn_apply(
+    p: dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    *,
+    feature_kind: str = "prf",
+    kernel_mode: str = "auto",
+) -> jax.Array:
+    """Full-sequence causal RFF linear attention. x: (B, S, d)."""
+    b, s, _ = x.shape
+    h, dh = cfg.padded_heads, cfg.resolved_head_dim
+    positions = jnp.arange(s)[None, :]
+    q, k, v = _project(p, cfg, x, positions)
+    scale = dh**-0.25  # split the 1/sqrt(dh) between q and k (exp kernel)
+    phi_q = _feature(p, q * scale, feature_kind)  # (B, S, H, D)
+    phi_k = _feature(p, k * scale, feature_kind)
+    dfeat = phi_q.shape[-1]
+    # (BH, S, ...) layout for the kernel
+    pq = phi_q.transpose(0, 2, 1, 3).reshape(b * h, s, dfeat)
+    pk = phi_k.transpose(0, 2, 1, 3).reshape(b * h, s, dfeat)
+    vv = v.transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+    out = ops.rff_attention(
+        pq.astype(jnp.float32),
+        pk.astype(jnp.float32),
+        vv.astype(jnp.float32),
+        mode=kernel_mode,
+        chunk=min(cfg.rff_chunk, s),
+        normalize=feature_kind == "prf",
+    )
+    out = out.reshape(b, h, s, dh).transpose(0, 2, 1, 3)  # (B, S, H, dh)
+    from repro.models.attention import apply_head_mask, head_mask, head_out
+
+    out = apply_head_mask(out, head_mask(cfg))
+    return head_out(p["wo"], out.astype(x.dtype))
+
+
+def rff_state_init(
+    cfg: ModelConfig, batch: int, dtype=jnp.float32
+) -> RFFState:
+    h, dh, dfeat = cfg.padded_heads, cfg.resolved_head_dim, cfg.rff_num_features
+    return RFFState(
+        s=jnp.zeros((batch, h, dfeat, dh), dtype),
+        z=jnp.zeros((batch, h, dfeat), dtype),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def rff_attn_decode(
+    p: dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    state: RFFState,
+    *,
+    feature_kind: str = "prf",
+) -> tuple[jax.Array, RFFState]:
+    """One-token decode from the fixed-size state. x: (B, 1, d).
+
+    Cost O(H · D · dv) per token — independent of how many tokens came
+    before. This is the LLM-serving analogue of RFFKLMS's fixed theta.
+    """
+    b = x.shape[0]
+    h, dh = cfg.padded_heads, cfg.resolved_head_dim
+    positions = state.pos[None, None] + jnp.zeros((b, 1), jnp.int32)
+    q, k, v = _project(p, cfg, x, positions)
+    scale = dh**-0.25
+    phi_q = _feature(p, q * scale, feature_kind)[:, 0]  # (B, H, D)
+    phi_k = _feature(p, k * scale, feature_kind)[:, 0]
+    vv = v[:, 0].astype(jnp.float32)  # (B, H, dh)
+
+    dfeat = phi_q.shape[-1]
+    pq = phi_q.reshape(b * h, dfeat)
+    pk = phi_k.reshape(b * h, dfeat)
+    vflat = vv.reshape(b * h, dh)
+    s_flat = state.s.astype(jnp.float32).reshape(b * h, dfeat, dh)
+    z_flat = state.z.astype(jnp.float32).reshape(b * h, dfeat)
+    out, s_new, z_new = ops.rff_attention_decode(s_flat, z_flat, pq, pk, vflat)
+    new_state = RFFState(
+        s=s_new.reshape(b, h, dfeat, dh).astype(state.s.dtype),
+        z=z_new.reshape(b, h, dfeat).astype(state.z.dtype),
+        pos=state.pos + 1,
+    )
+    out = out.reshape(b, 1, h, dh).astype(x.dtype)
+    from repro.models.attention import apply_head_mask, head_mask, head_out
+
+    out = apply_head_mask(out, head_mask(cfg))
+    return head_out(p["wo"], out), new_state

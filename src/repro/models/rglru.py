@@ -1,0 +1,172 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin) + its hybrid pattern.
+
+Real-Gated Linear Recurrent Unit with **block-diagonal per-head gates**
+(faithful to the published RecurrentGemma: ``BlockDiagonalLinear`` with
+``num_blocks = num_heads``; this also makes the gates local under head
+sharding — a dense (W, W) gate would partial-sum all-reduce a full-width
+activation per gate per layer, observed before this layout):
+
+    r_t = sigmoid(blockdiag(W_r) xw_t)      (recurrence gate)
+    i_t = sigmoid(blockdiag(W_i) xw_t)      (input gate)
+    a_t = exp(-c * softplus(Lambda) * r_t)  (per-channel decay, c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) (i_t * xw_t)
+
+Channels are organized as (heads, head_dim) throughout: projections are
+head-structured (shardable whole-head), conv/recurrence/gates operate
+per-head, inert padding heads (cfg.pad_heads_to) are masked at the output
+projection exactly like attention heads.
+
+Block structure (Griffin recurrent block): conv1d -> RG-LRU on one branch,
+gelu gate on the other, merged by elementwise product, then out-projection.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.attention import (
+    apply_head_mask,
+    head_mask,
+    head_out,
+    head_out_init,
+    head_proj,
+    head_proj_init,
+)
+
+__all__ = ["rglru_init", "rglru_apply", "rglru_decode", "RGLRUState"]
+
+_C = 8.0
+
+
+class RGLRUState(NamedTuple):
+    h: jax.Array  # (B, Hp, hd) recurrent state
+    conv: jax.Array  # (B, conv_width-1, Hp, hd) conv tail
+    pos: jax.Array
+
+
+def _dims(cfg: ModelConfig) -> tuple[int, int]:
+    """(padded head count, lru head dim)."""
+    w = cfg.lru_width or cfg.d_model
+    hd = w // cfg.num_heads
+    return cfg.padded_heads, hd
+
+
+def rglru_init(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    hp, hd = _dims(cfg)
+    keys = jax.random.split(key, 6)
+    scale = hd**-0.5
+    return {
+        "w_x": head_proj_init(keys[0], d, hp, hd, dtype=dtype),
+        "w_gate": head_proj_init(keys[1], d, hp, hd, dtype=dtype),
+        "conv_w": (jax.random.normal(keys[2], (hp, hd, cfg.conv_width)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((hp, hd), dtype),
+        # block-diagonal gates: one (hd, hd) block per head
+        "w_r": (scale * jax.random.normal(keys[3], (hp, hd, hd))).astype(dtype),
+        "w_i": (scale * jax.random.normal(keys[4], (hp, hd, hd))).astype(dtype),
+        # Lambda param init so decays start in a useful range
+        "lam": jnp.log(
+            jnp.expm1(jnp.linspace(0.3, 1.5, hp * hd))
+        ).reshape(hp, hd).astype(jnp.float32),
+        "w_out": head_out_init(keys[5], hp, hd, d, dtype=dtype),
+    }
+
+
+def _causal_conv(u, w, b, tail=None):
+    """Depthwise causal conv over time. u: (B, S, Hp, hd); w: (Hp, hd, W)."""
+    width = w.shape[-1]
+    if tail is None:
+        pad = jnp.zeros((u.shape[0], width - 1) + u.shape[2:], u.dtype)
+    else:
+        pad = tail
+    up = jnp.concatenate([pad, u], axis=1)
+    out = sum(
+        up[:, i : i + u.shape[1]] * w[None, None, :, :, i] for i in range(width)
+    )
+    return out + b, up[:, -(width - 1) :]
+
+
+def _lru_scan(u: jax.Array, a: jax.Array, h0: jax.Array, chunk: int):
+    """Diagonal recurrence h_t = a_t h_{t-1} + u_t, chunked assoc-scan.
+
+    u, a: (B, S, Hp, hd); h0: (B, Hp, hd).
+    """
+    bsz, s = u.shape[:2]
+    rest = u.shape[2:]
+    c = min(chunk, s)
+    assert s % c == 0
+    nc = s // c
+    uc = jnp.moveaxis(u.reshape((bsz, nc, c) + rest), 1, 0)
+    ac = jnp.moveaxis(a.reshape((bsz, nc, c) + rest), 1, 0)
+
+    def combine(x, y):
+        a1, u1 = x
+        a2, u2 = y
+        return a1 * a2, u1 * a2 + u2
+
+    def body(h, inp):
+        au, uu = inp  # (B, c, Hp, hd)
+        a_cum, u_cum = jax.lax.associative_scan(combine, (au, uu), axis=1)
+        hs = a_cum * h[:, None] + u_cum
+        return hs[:, -1], hs
+
+    h_final, hs = jax.lax.scan(body, h0, (ac, uc))
+    return jnp.moveaxis(hs, 0, 1).reshape((bsz, s) + rest), h_final
+
+
+def _gates(p, xw):
+    """Block-diagonal gates. xw: (..., Hp, hd)."""
+    r_pre = jnp.einsum("...he,hef->...hf", xw, p["w_r"])
+    i_pre = jnp.einsum("...he,hef->...hf", xw, p["w_i"])
+    r = jax.nn.sigmoid(r_pre.astype(jnp.float32))
+    i = jax.nn.sigmoid(i_pre.astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, beta * i
+
+
+def rglru_apply(
+    p: dict, cfg: ModelConfig, x: jax.Array, chunk: int = 256
+) -> jax.Array:
+    """Full-sequence recurrent block. x: (B, S, d)."""
+    bsz, s, _ = x.shape
+    hp, hd = _dims(cfg)
+    gate = jax.nn.gelu(head_proj(p["w_gate"], x))  # (B, S, Hp, hd)
+    xw = head_proj(p["w_x"], x)
+    xw, _ = _causal_conv(xw, p["conv_w"], p["conv_b"])
+    a, scaled_in = _gates(p, xw)
+    u = scaled_in * xw.astype(jnp.float32)
+    h0 = jnp.zeros((bsz, hp, hd), jnp.float32)
+    hs, _ = _lru_scan(u, a, h0, chunk)
+    y = hs.astype(x.dtype) * gate
+    return head_out(p["w_out"], apply_head_mask(y, head_mask(cfg)))
+
+
+def rglru_state_init(cfg: ModelConfig, batch: int) -> RGLRUState:
+    hp, hd = _dims(cfg)
+    return RGLRUState(
+        h=jnp.zeros((batch, hp, hd), jnp.float32),
+        conv=jnp.zeros((batch, cfg.conv_width - 1, hp, hd), jnp.float32),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def rglru_decode(
+    p: dict, cfg: ModelConfig, x: jax.Array, state: RGLRUState
+) -> tuple[jax.Array, RGLRUState]:
+    """One-token decode: O(W) state update. x: (B, 1, d)."""
+    gate = jax.nn.gelu(head_proj(p["w_gate"], x))  # (B, 1, Hp, hd)
+    xw = head_proj(p["w_x"], x)
+    xw, new_tail = _causal_conv(
+        xw, p["conv_w"], p["conv_b"], tail=state.conv.astype(xw.dtype)
+    )
+    a, scaled_in = _gates(p, xw[:, 0])
+    u = scaled_in * xw[:, 0].astype(jnp.float32)
+    h = a * state.h + u
+    y = h[:, None].astype(x.dtype) * gate
+    out = head_out(p["w_out"], apply_head_mask(y, head_mask(cfg)))
+    return out, RGLRUState(h=h, conv=new_tail.astype(jnp.float32), pos=state.pos + 1)

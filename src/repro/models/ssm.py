@@ -1,0 +1,200 @@
+"""Mamba-2 SSD (state-space duality) mixer — chunked, MXU-friendly.
+
+Per head: scalar decay ``a_t = exp(dt_t * A)`` (A < 0 learned), state
+``h in R^{dh x N}``:
+
+    h_t = a_t h_{t-1} + dt_t x_t B_t^T,      y_t = h_t C_t + D x_t
+
+The chunked form (the same blocking as our RFF linear-attention kernel, plus
+decays — this *is* the state-space duality) computes within a chunk
+
+    M[t,s] = exp(L_t - L_s) (C_t . B_s) dt_s   (s <= t),  L = cumsum(log a)
+    y_intra = M x,  y_inter[t] = exp(L_t) (C_t . h_prev)
+
+entirely with GEMMs. Sequential dependency only across chunks (lax.scan).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense, dense_init
+
+__all__ = ["mamba2_init", "mamba2_apply", "mamba2_decode", "Mamba2State"]
+
+
+class Mamba2State(NamedTuple):
+    h: jax.Array  # (B, H, dh, N) SSM state
+    conv: jax.Array  # (B, conv_dim, W-1) depthwise-conv tail
+    pos: jax.Array
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // cfg.ssm_head_dim
+    conv_dim = d_inner + 2 * cfg.ssm_state
+    return d_inner, nheads, conv_dim
+
+
+def mamba2_init(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    d_inner, nheads, conv_dim = _dims(cfg)
+    n = cfg.ssm_state
+    keys = jax.random.split(key, 5)
+    # in_proj emits [z (gate), x, B, C, dt] concatenated.
+    return {
+        "w_in": dense_init(keys[0], d, 2 * d_inner + 2 * n + nheads, dtype=dtype),
+        "conv_w": (
+            jax.random.normal(keys[1], (conv_dim, cfg.conv_width)) * 0.1
+        ).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "a_log": jnp.log(
+            jnp.linspace(1.0, 16.0, nheads)
+        ).astype(jnp.float32),  # A = -exp(a_log)
+        "d_skip": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.zeros((nheads,), jnp.float32),
+        "norm_scale": jnp.ones((d_inner,), dtype),
+        "w_out": dense_init(keys[2], d_inner, d, dtype=dtype),
+    }
+
+
+def _split_in(cfg, proj):
+    d_inner, nheads, _ = _dims(cfg)
+    n = cfg.ssm_state
+    z, xbc_dt = jnp.split(proj, [d_inner], axis=-1)
+    xbc, dt = jnp.split(xbc_dt, [d_inner + 2 * n], axis=-1)
+    return z, xbc, dt  # gate, conv-input, per-head dt
+
+
+def _causal_conv(xbc, w, b, tail=None):
+    """Depthwise causal conv over time. xbc: (B, S, C); w: (C, W)."""
+    width = w.shape[1]
+    if tail is None:
+        pad = jnp.zeros((xbc.shape[0], width - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = tail  # (B, W-1, C)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(
+        xp[:, i : i + xbc.shape[1], :] * w[:, i] for i in range(width)
+    )
+    new_tail = xp[:, -(width - 1) :, :] if width > 1 else pad
+    return jax.nn.silu(out + b), new_tail
+
+
+def _ssd_chunked(x, b_in, c_in, dt, a_log, chunk):
+    """Chunked SSD scan.
+
+    x: (B, S, H, dh); b_in/c_in: (B, S, N); dt: (B, S, H) (softplus'd).
+    Returns y (B, S, H, dh), final state (B, H, dh, N).
+    """
+    bsz, s, h, dh = x.shape
+    n = b_in.shape[-1]
+    c = min(chunk, s)
+    assert s % c == 0, f"seq {s} % chunk {c} != 0"
+    nc = s // c
+    a = -jnp.exp(a_log)  # (H,) negative decay rates
+
+    xc = x.reshape(bsz, nc, c, h, dh)
+    bc = b_in.reshape(bsz, nc, c, n)
+    cc = c_in.reshape(bsz, nc, c, n)
+    dtc = dt.reshape(bsz, nc, c, h)
+
+    def body(h_state, inp):
+        xk, bk, ck, dtk = inp  # (B,c,H,dh), (B,c,N), (B,c,N), (B,c,H)
+        loga = dtk * a  # (B,c,H) log per-step decay
+        lcum = jnp.cumsum(loga, axis=1)  # L_t inclusive
+        # M[t,s] = exp(L_t - L_s) * (C_t.B_s) * dt_s, s<=t
+        ldiff = lcum[:, :, None, :] - lcum[:, None, :, :]  # (B,c,c,H)
+        mask = jnp.tril(jnp.ones((c, c), bool))
+        ldiff = jnp.where(mask[None, :, :, None], ldiff, -jnp.inf)
+        cb = jnp.einsum("btn,bsn->bts", ck, bk)  # (B,c,c)
+        m = jnp.exp(ldiff) * (cb[..., None] * dtk[:, None, :, :])
+        y = jnp.einsum("btsh,bshd->bthd", m, xk)  # intra
+        # inter-chunk: y += exp(L_t) C_t . h_prev
+        decay_t = jnp.exp(lcum)  # (B,c,H)
+        y = y + jnp.einsum(
+            "bth,btn,bhdn->bthd", decay_t, ck, h_state
+        )
+        # state update: h = exp(L_c) h_prev + sum_s exp(L_c - L_s) dt_s x_s B_s^T
+        total = lcum[:, -1:, :]  # (B,1,H)
+        w_s = jnp.exp(total - lcum) * dtk  # (B,c,H)
+        h_new = jnp.einsum("bsh,bshd,bsn->bhdn", w_s, xk, bk)
+        h_state = h_state * jnp.exp(total[:, 0])[:, :, None, None] + h_new
+        return h_state, y
+
+    h0 = jnp.zeros((bsz, h, dh, n), jnp.float32)
+    xs = (
+        jnp.moveaxis(xc, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(bc, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(cc, 1, 0).astype(jnp.float32),
+        jnp.moveaxis(dtc, 1, 0).astype(jnp.float32),
+    )
+    h_final, ys = jax.lax.scan(body, h0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, s, h, dh)
+    return y, h_final
+
+
+def mamba2_apply(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Full-sequence SSD block. x: (B, S, d)."""
+    bsz, s, _ = x.shape
+    d_inner, nheads, _ = _dims(cfg)
+    n = cfg.ssm_state
+    proj = dense(p["w_in"], x)
+    z, xbc, dt = _split_in(cfg, proj)
+    xbc, _ = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs, b_in, c_in = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+    xh = xs.reshape(bsz, s, nheads, cfg.ssm_head_dim)
+    dt_sp = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    y, _ = _ssd_chunked(xh, b_in, c_in, dt_sp, p["a_log"], cfg.ssm_chunk)
+    y = y + p["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(bsz, s, d_inner).astype(x.dtype)
+    # gated RMS-ish norm (mamba2 uses RMSNorm(y * silu(z)))
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), -1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-5)).astype(x.dtype)
+    y = y * p["norm_scale"]
+    return dense(p["w_out"], y)
+
+
+def mamba2_state_init(cfg: ModelConfig, batch: int) -> Mamba2State:
+    d_inner, nheads, conv_dim = _dims(cfg)
+    return Mamba2State(
+        h=jnp.zeros((batch, nheads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+        conv=jnp.zeros((batch, cfg.conv_width - 1, conv_dim), jnp.float32),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def mamba2_decode(
+    p: dict, cfg: ModelConfig, x: jax.Array, state: Mamba2State
+) -> tuple[jax.Array, Mamba2State]:
+    """One-token SSD decode: O(H dh N) state update. x: (B, 1, d)."""
+    bsz = x.shape[0]
+    d_inner, nheads, _ = _dims(cfg)
+    n = cfg.ssm_state
+    proj = dense(p["w_in"], x)
+    z, xbc, dt = _split_in(cfg, proj)
+    xbc, new_tail = _causal_conv(
+        xbc, p["conv_w"], p["conv_b"], tail=state.conv.astype(xbc.dtype)
+    )
+    xs, b_in, c_in = jnp.split(xbc[:, 0], [d_inner, d_inner + n], axis=-1)
+    xh = xs.reshape(bsz, nheads, cfg.ssm_head_dim).astype(jnp.float32)
+    dt_sp = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,H)
+    a = -jnp.exp(p["a_log"])
+    decay = jnp.exp(dt_sp * a)  # (B, H)
+    b32 = b_in.astype(jnp.float32)
+    h_new = state.h * decay[:, :, None, None] + jnp.einsum(
+        "bh,bhd,bn->bhdn", dt_sp, xh, b32
+    )
+    y = jnp.einsum("bhdn,bn->bhd", h_new, c_in.astype(jnp.float32))
+    y = y + p["d_skip"][None, :, None] * xh
+    y = y.reshape(bsz, 1, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), -1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(var + 1e-5)).astype(x.dtype)
+    y = y * p["norm_scale"]
+    out = dense(p["w_out"], y)
+    return out, Mamba2State(h=h_new, conv=new_tail.astype(jnp.float32), pos=state.pos + 1)

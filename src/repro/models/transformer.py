@@ -1,0 +1,490 @@
+"""Unified decoder-only LM assembled from ModelConfig.
+
+One model class covers all ten assigned architectures:
+  * mixer = "attention": [dense | moe] transformers with gqa / mla / rff
+    attention (internvl2, deepseek, arctic, command-r, minicpm3, llama3,
+    qwen2, musicgen)
+  * mixer = "mamba2": SSD blocks, no FFN (mamba2-130m)
+  * mixer = "rglru_hybrid": (recurrent, recurrent, local-attn) pattern with
+    MLPs (recurrentgemma)
+
+Layer stacks are ``lax.scan``-ned over stacked params (compile time
+independent of depth) with optional remat. Decode threads a per-layer state
+stack through the same scan.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import replace
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import rff_attention as rff_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    dense,
+    dense_init,
+    embed_init,
+    glu_mlp,
+    glu_mlp_init,
+    rmsnorm,
+    rmsnorm_init,
+)
+
+__all__ = [
+    "init_params",
+    "forward",
+    "lm_loss",
+    "decode_state_init",
+    "decode_step",
+    "with_rff_attention",
+]
+
+
+def with_rff_attention(cfg: ModelConfig) -> ModelConfig:
+    """Switch a full-attention config to RFF linear attention (the paper's
+    fixed-size-state technique) — used for the long_500k cells."""
+    return replace(cfg, attention="rff")
+
+
+# ---------------------------------------------------------------------------
+# Block init / apply (full sequence)
+# ---------------------------------------------------------------------------
+
+
+def _attn_block_init(key, cfg: ModelConfig, dtype):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {"ln1": rmsnorm_init(cfg.d_model, dtype)}
+    if cfg.attention == "mla":
+        p["attn"] = attn_mod.mla_init(k1, cfg, dtype)
+    elif cfg.attention == "rff":
+        p["attn"] = rff_mod.rff_attn_init(k1, cfg, dtype)
+    else:
+        p["attn"] = attn_mod.gqa_init(k1, cfg, dtype)
+    p["ln2"] = rmsnorm_init(cfg.d_model, dtype)
+    if cfg.moe is not None:
+        p["ffn"] = moe_mod.moe_init(k2, cfg, dtype)
+    else:
+        p["ffn"] = glu_mlp_init(k3, cfg.d_model, cfg.d_ff, dtype)
+    return p
+
+
+def _attn_block_apply(p, cfg: ModelConfig, x, window: int = 0):
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if cfg.attention == "mla":
+        a = attn_mod.mla_apply(p["attn"], cfg, h)
+    elif cfg.attention == "rff":
+        a = rff_mod.rff_attn_apply(p["attn"], cfg, h)
+    else:
+        a = attn_mod.gqa_apply(p["attn"], cfg, h, window=window)
+    x = x + a
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if cfg.moe is not None:
+        f = moe_mod.moe_apply(p["ffn"], cfg, h)
+    else:
+        f = glu_mlp(p["ffn"], h)
+    return x + f
+
+
+def _mamba_block_init(key, cfg: ModelConfig, dtype):
+    return {
+        "ln1": rmsnorm_init(cfg.d_model, dtype),
+        "mixer": ssm_mod.mamba2_init(key, cfg, dtype),
+    }
+
+
+def _mamba_block_apply(p, cfg: ModelConfig, x):
+    return x + ssm_mod.mamba2_apply(p["mixer"], cfg, rmsnorm(p["ln1"], x, cfg.norm_eps))
+
+
+def _rec_block_init(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": rmsnorm_init(cfg.d_model, dtype),
+        "temporal": rglru_mod.rglru_init(k1, cfg, dtype),
+        "ln2": rmsnorm_init(cfg.d_model, dtype),
+        "mlp": glu_mlp_init(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _rec_block_apply(p, cfg: ModelConfig, x):
+    x = x + rglru_mod.rglru_apply(p["temporal"], cfg, rmsnorm(p["ln1"], x, cfg.norm_eps))
+    return x + glu_mlp(p["mlp"], rmsnorm(p["ln2"], x, cfg.norm_eps))
+
+
+def _local_attn_block_init(key, cfg: ModelConfig, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": rmsnorm_init(cfg.d_model, dtype),
+        "attn": attn_mod.gqa_init(k1, cfg, dtype),
+        "ln2": rmsnorm_init(cfg.d_model, dtype),
+        "mlp": glu_mlp_init(k2, cfg.d_model, cfg.d_ff, dtype),
+    }
+
+
+def _local_attn_block_apply(p, cfg: ModelConfig, x):
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    x = x + attn_mod.gqa_apply(p["attn"], cfg, h, window=cfg.local_window)
+    return x + glu_mlp(p["mlp"], rmsnorm(p["ln2"], x, cfg.norm_eps))
+
+
+def _hybrid_group_init(key, cfg: ModelConfig, dtype):
+    """(recurrent, recurrent, local-attention) super-block."""
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "rec1": _rec_block_init(k1, cfg, dtype),
+        "rec2": _rec_block_init(k2, cfg, dtype),
+        "attn": _local_attn_block_init(k3, cfg, dtype),
+    }
+
+
+def _hybrid_group_apply(p, cfg: ModelConfig, x):
+    x = _rec_block_apply(p["rec1"], cfg, x)
+    x = _rec_block_apply(p["rec2"], cfg, x)
+    return _local_attn_block_apply(p["attn"], cfg, x)
+
+
+def _layer_init_fn(cfg: ModelConfig):
+    if cfg.mixer == "mamba2":
+        return _mamba_block_init
+    if cfg.mixer == "rglru_hybrid":
+        return _hybrid_group_init
+    return _attn_block_init
+
+
+def _layer_apply_fn(cfg: ModelConfig):
+    if cfg.mixer == "mamba2":
+        return _mamba_block_apply
+    if cfg.mixer == "rglru_hybrid":
+        return _hybrid_group_apply
+    return _attn_block_apply
+
+
+def _num_scan_layers(cfg: ModelConfig) -> tuple[int, int]:
+    """(scanned stack length, unrolled remainder) — hybrid groups by 3."""
+    if cfg.mixer == "rglru_hybrid":
+        return cfg.num_layers // 3, cfg.num_layers % 3
+    return cfg.num_layers, 0
+
+
+# ---------------------------------------------------------------------------
+# Model init / forward
+# ---------------------------------------------------------------------------
+
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> dict:
+    dtype = cfg.activation_dtype
+    k_embed, k_layers, k_extra, k_head = jax.random.split(key, 4)
+    n_scan, n_extra = _num_scan_layers(cfg)
+    layer_init = _layer_init_fn(cfg)
+
+    params: dict[str, Any] = {
+        "embed": embed_init(k_embed, cfg.padded_vocab, cfg.d_model, dtype),
+        "final_norm": rmsnorm_init(cfg.d_model, dtype),
+    }
+    layer_keys = jax.random.split(k_layers, max(n_scan, 1))
+    if cfg.scan_layers:
+        params["blocks"] = jax.vmap(lambda k: layer_init(k, cfg, dtype))(layer_keys)
+    else:
+        params["blocks_list"] = [
+            layer_init(layer_keys[i], cfg, dtype) for i in range(n_scan)
+        ]
+    if n_extra:  # hybrid remainder: recurrent blocks
+        extra_keys = jax.random.split(k_extra, n_extra)
+        params["extra"] = [
+            _rec_block_init(extra_keys[i], cfg, dtype) for i in range(n_extra)
+        ]
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(k_head, cfg.d_model, cfg.padded_vocab, dtype=dtype)
+    return params
+
+
+def _mask_vocab(cfg: ModelConfig, logits: jax.Array) -> jax.Array:
+    """-inf the inert padded vocab slots (exactly the unpadded function)."""
+    vp = cfg.padded_vocab
+    if vp == cfg.vocab_size:
+        return logits
+    valid = jnp.arange(vp) < cfg.vocab_size
+    return jnp.where(valid, logits, jnp.asarray(-1e30, logits.dtype))
+
+
+def _constrain_batch(cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    """Pin the activation batch sharding through the layer stack (see
+    ModelConfig.activation_batch_axes)."""
+    if not cfg.activation_batch_axes:
+        return x
+    from jax.sharding import PartitionSpec as P
+
+    spec = P(tuple(cfg.activation_batch_axes), *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def _apply_stack(params, cfg: ModelConfig, x):
+    apply_fn = _layer_apply_fn(cfg)
+    block = functools.partial(apply_fn, cfg=cfg)
+    if cfg.remat:
+        block = jax.checkpoint(
+            lambda p, h: _constrain_batch(cfg, apply_fn(p, cfg, h)),
+            prevent_cse=False,
+        )
+    else:
+        block = lambda p, h: _constrain_batch(cfg, apply_fn(p, cfg, h))  # noqa: E731
+
+    x = _constrain_batch(cfg, x)
+    if cfg.scan_layers:
+        def body(h, layer_p):
+            return block(layer_p, h), None
+
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+    else:
+        for layer_p in params["blocks_list"]:
+            x = block(layer_p, x)
+    for extra_p in params.get("extra", []):
+        x = _rec_block_apply(extra_p, cfg, x)
+    return x
+
+
+def forward(
+    params: dict, cfg: ModelConfig, tokens: jax.Array | None = None,
+    embeds: jax.Array | None = None,
+) -> jax.Array:
+    """Full-sequence forward. tokens: (B, S) int32 — or, for frontend archs,
+    embeds: (B, S, d) precomputed patch/frame embeddings (stub frontend).
+
+    Returns logits (B, S, V).
+    """
+    if embeds is None:
+        x = jnp.take(params["embed"]["table"], tokens, axis=0)
+    else:
+        x = embeds.astype(cfg.activation_dtype)
+    x = _apply_stack(params, cfg, x)
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["table"].T
+    else:
+        logits = dense(params["head"], x)
+    return _mask_vocab(cfg, logits)
+
+
+def lm_loss(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jax.Array | None = None,
+    embeds: jax.Array | None = None,
+    labels: jax.Array | None = None,
+) -> jax.Array:
+    """Next-token cross entropy (f32 logsumexp), mean over tokens.
+
+    ``cfg.loss_vocab_chunks > 1`` streams the logsumexp over vocab chunks
+    (running-max/denominator, the flash-softmax trick over V) so the f32
+    logits tensor is never materialized at full vocab width — cuts the
+    training-loss memory peak for 100k+ vocabs.
+    """
+    logits = forward(params, cfg, tokens=tokens, embeds=embeds)
+    if labels is None:
+        labels = jnp.pad(tokens[:, 1:], ((0, 0), (0, 1)))
+        mask = jnp.ones_like(labels).at[:, -1].set(0)
+    else:
+        mask = (labels >= 0).astype(jnp.int32)
+        labels = jnp.maximum(labels, 0)
+
+    nc = max(int(cfg.loss_vocab_chunks), 1)
+    vp = logits.shape[-1]
+    if nc > 1 and vp % nc == 0:
+        vc = vp // nc
+        lgc = jnp.moveaxis(
+            logits.reshape(logits.shape[:-1] + (nc, vc)), -2, 0
+        )  # (nc, B, S, vc)
+
+        def body(carry, inp):
+            m, s, gold = carry
+            chunk, idx = inp
+            c32 = chunk.astype(jnp.float32)
+            m_new = jnp.maximum(m, jnp.max(c32, axis=-1))
+            s = s * jnp.exp(m - m_new) + jnp.sum(
+                jnp.exp(c32 - m_new[..., None]), axis=-1
+            )
+            local = labels - idx * vc
+            hit = (local >= 0) & (local < vc)
+            g = jnp.take_along_axis(
+                c32, jnp.clip(local, 0, vc - 1)[..., None], axis=-1
+            )[..., 0]
+            gold = jnp.where(hit, g, gold)
+            return (m_new, s, gold), None
+
+        init = (
+            jnp.full(labels.shape, -1e30, jnp.float32),
+            jnp.zeros(labels.shape, jnp.float32),
+            jnp.zeros(labels.shape, jnp.float32),
+        )
+        (m, s, gold), _ = jax.lax.scan(body, init, (lgc, jnp.arange(nc)))
+        lse = m + jnp.log(s)
+    else:
+        lg = logits.astype(jnp.float32)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1)
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve_step)
+# ---------------------------------------------------------------------------
+
+
+def _block_state_init(cfg: ModelConfig, batch: int, max_len: int):
+    dtype = cfg.activation_dtype
+    if cfg.mixer == "mamba2":
+        return ssm_mod.mamba2_state_init(cfg, batch)
+    if cfg.mixer == "rglru_hybrid":
+        dh = cfg.resolved_head_dim
+        win = min(cfg.local_window, max_len)
+        return {
+            "rec1": rglru_mod.rglru_state_init(cfg, batch),
+            "rec2": rglru_mod.rglru_state_init(cfg, batch),
+            "attn": attn_mod.KVCache(
+                k=jnp.zeros((batch, win, cfg.num_kv_heads, dh), dtype),
+                v=jnp.zeros((batch, win, cfg.num_kv_heads, dh), dtype),
+                pos=jnp.zeros((), jnp.int32),
+            ),
+        }
+    if cfg.attention == "rff":
+        return rff_mod.rff_state_init(cfg, batch)
+    if cfg.attention == "mla":
+        m = cfg.mla
+        return attn_mod.MLACache(
+            c_kv=jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+            k_rope=jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype),
+            pos=jnp.zeros((), jnp.int32),
+        )
+    dh = cfg.resolved_head_dim
+    return attn_mod.KVCache(
+        k=jnp.zeros((batch, max_len, cfg.num_kv_heads, dh), dtype),
+        v=jnp.zeros((batch, max_len, cfg.num_kv_heads, dh), dtype),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def decode_state_init(cfg: ModelConfig, batch: int, max_len: int):
+    """Per-layer decode state, stacked along the layer axis when scanning."""
+    n_scan, n_extra = _num_scan_layers(cfg)
+    one = _block_state_init(cfg, batch, max_len)
+    if cfg.scan_layers:
+        stack = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n_scan,) + a.shape), one
+        )
+    else:
+        stack = [_block_state_init(cfg, batch, max_len) for _ in range(n_scan)]
+    extras = [rglru_mod.rglru_state_init(cfg, batch) for _ in range(n_extra)]
+    return {"stack": stack, "extra": extras}
+
+
+def _block_decode(p, cfg: ModelConfig, x, state):
+    if cfg.mixer == "mamba2":
+        h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+        out, new_state = ssm_mod.mamba2_decode(p["mixer"], cfg, h, state)
+        return x + out, new_state
+    if cfg.mixer == "rglru_hybrid":
+        # rec1
+        h = rmsnorm(p["rec1"]["ln1"], x, cfg.norm_eps)
+        out, s1 = rglru_mod.rglru_decode(p["rec1"]["temporal"], cfg, h, state["rec1"])
+        x = x + out
+        x = x + glu_mlp(p["rec1"]["mlp"], rmsnorm(p["rec1"]["ln2"], x, cfg.norm_eps))
+        # rec2
+        h = rmsnorm(p["rec2"]["ln1"], x, cfg.norm_eps)
+        out, s2 = rglru_mod.rglru_decode(p["rec2"]["temporal"], cfg, h, state["rec2"])
+        x = x + out
+        x = x + glu_mlp(p["rec2"]["mlp"], rmsnorm(p["rec2"]["ln2"], x, cfg.norm_eps))
+        # local attention (ring-buffer KV cache of window size)
+        h = rmsnorm(p["attn"]["ln1"], x, cfg.norm_eps)
+        out, s3 = _ring_gqa_decode(p["attn"]["attn"], cfg, h, state["attn"])
+        x = x + out
+        x = x + glu_mlp(p["attn"]["mlp"], rmsnorm(p["attn"]["ln2"], x, cfg.norm_eps))
+        return x, {"rec1": s1, "rec2": s2, "attn": s3}
+    # attention families
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if cfg.attention == "rff":
+        out, new_state = rff_mod.rff_attn_decode(p["attn"], cfg, h, state)
+    elif cfg.attention == "mla":
+        out, new_state = attn_mod.mla_decode(p["attn"], cfg, h, state)
+    else:
+        out, new_state = attn_mod.gqa_decode(p["attn"], cfg, h, state)
+    x = x + out
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if cfg.moe is not None:
+        f = moe_mod.moe_apply(p["ffn"], cfg, h)
+    else:
+        f = glu_mlp(p["ffn"], h)
+    return x + f, new_state
+
+
+def _ring_gqa_decode(p, cfg: ModelConfig, x, cache: attn_mod.KVCache):
+    """Sliding-window decode with a ring-buffer cache (bounded memory).
+
+    Ring semantics make *positional* masking incorrect after wrap-around, but
+    every resident entry is by construction within the window, so attention
+    over all valid slots is exactly sliding-window attention.
+    """
+    win = cache.k.shape[1]
+    b = x.shape[0]
+    positions = cache.pos[None, None] + jnp.zeros((b, 1), jnp.int32)
+    q, k_new, v_new = attn_mod._project_qkv(p, cfg, x, positions)
+    slot = jnp.mod(cache.pos, win)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache.k, k_new, slot, 1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache.v, v_new, slot, 1)
+    kv_len = jnp.minimum(cache.pos + 1, win)
+    out = attn_mod.dense_attention(
+        q, k_cache, v_cache, causal=False, kv_len=kv_len
+    )
+    return (
+        attn_mod.head_out(p["wo"], out),
+        attn_mod.KVCache(k=k_cache, v=v_cache, pos=cache.pos + 1),
+    )
+
+
+def decode_step(
+    params: dict, cfg: ModelConfig, state: dict, token: jax.Array,
+    embed_in: jax.Array | None = None,
+) -> tuple[jax.Array, dict]:
+    """One serving step: next-token logits + updated state.
+
+    token: (B,) int32 (or embed_in (B, 1, d) for frontend archs).
+    """
+    if embed_in is None:
+        x = jnp.take(params["embed"]["table"], token[:, None], axis=0)
+    else:
+        x = embed_in.astype(cfg.activation_dtype)
+
+    if cfg.scan_layers:
+        def body(h, inp):
+            layer_p, layer_s = inp
+            h2, new_s = _block_decode(layer_p, cfg, h, layer_s)
+            return h2, new_s
+
+        x, new_stack = jax.lax.scan(body, x, (params["blocks"], state["stack"]))
+    else:
+        new_stack = []
+        for layer_p, layer_s in zip(params["blocks_list"], state["stack"]):
+            x, s = _block_decode(layer_p, cfg, x, layer_s)
+            new_stack.append(s)
+
+    new_extras = []
+    for extra_p, extra_s in zip(params.get("extra", []), state["extra"]):
+        h = rmsnorm(extra_p["ln1"], x, cfg.norm_eps)
+        out, s = rglru_mod.rglru_decode(extra_p["temporal"], cfg, h, extra_s)
+        x = x + out
+        x = x + glu_mlp(extra_p["mlp"], rmsnorm(extra_p["ln2"], x, cfg.norm_eps))
+        new_extras.append(s)
+
+    x = rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    if cfg.tie_embeddings:
+        logits = x @ params["embed"]["table"].T
+    else:
+        logits = dense(params["head"], x)
+    return _mask_vocab(cfg, logits)[:, 0], {"stack": new_stack, "extra": new_extras}

@@ -1,0 +1,17 @@
+from repro.optim.optimizers import (
+    AdamWState,
+    adamw_init,
+    adamw_update,
+    global_norm,
+    sgd_update,
+)
+from repro.optim import schedules
+
+__all__ = [
+    "AdamWState",
+    "adamw_init",
+    "adamw_update",
+    "global_norm",
+    "sgd_update",
+    "schedules",
+]

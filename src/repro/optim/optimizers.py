@@ -1,0 +1,78 @@
+"""Optimizers: AdamW (hand-rolled, pytree-native) and plain SGD/LMS.
+
+Moment dtype is configurable (``bfloat16`` halves optimizer HBM for the
+480B-class archs); moments inherit the parameter shardings, so with FSDP
+params the optimizer state is ZeRO-sharded for free.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "sgd_update", "global_norm"]
+
+
+class AdamWState(NamedTuple):
+    m: Any  # pytree like params
+    v: Any
+    count: jax.Array
+
+
+def adamw_init(params: Any, moment_dtype: jnp.dtype = jnp.float32) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, moment_dtype)  # noqa: E731
+    return AdamWState(
+        m=jax.tree.map(zeros, params),
+        v=jax.tree.map(zeros, params),
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def adamw_update(
+    params: Any,
+    grads: Any,
+    state: AdamWState,
+    lr: float | jax.Array,
+    *,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    grad_clip: float = 1.0,
+) -> tuple[Any, AdamWState]:
+    count = state.count + 1
+    if grad_clip:
+        gnorm = global_norm(grads)
+        scale = jnp.minimum(1.0, grad_clip / (gnorm + 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    c1 = 1.0 - b1**count.astype(jnp.float32)
+    c2 = 1.0 - b2**count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+        step = (m32 / c1) / (jnp.sqrt(v32 / c2) + eps)
+        if weight_decay and p.ndim >= 2:  # no decay on norms/biases
+            step = step + weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * step
+        return p_new.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, AdamWState(m=new_m, v=new_v, count=count)
+
+
+def sgd_update(params: Any, grads: Any, lr: float | jax.Array) -> Any:
+    return jax.tree.map(lambda p, g: (p - lr * g.astype(p.dtype)).astype(p.dtype), params, grads)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves)
+    )

@@ -1,0 +1,9 @@
+from repro.roofline.analysis import (
+    HW,
+    HloCost,
+    RooflineTerms,
+    parse_hlo_cost,
+    roofline_terms,
+)
+
+__all__ = ["HW", "HloCost", "RooflineTerms", "parse_hlo_cost", "roofline_terms"]

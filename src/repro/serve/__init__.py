@@ -1,0 +1,3 @@
+from repro.serve.serve_loop import generate, prefill_tokens
+
+__all__ = ["generate", "prefill_tokens"]

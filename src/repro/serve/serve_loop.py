@@ -1,0 +1,74 @@
+"""Batched autoregressive serving loop.
+
+``generate`` runs N decode steps under one jit (lax.scan over steps), with
+greedy or temperature sampling; the decode state is whatever the arch
+provides (KV cache / MLA latent cache / RFF fixed state / SSM / LRU) — all
+thread through ``models.decode_step`` identically.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import decode_state_init, decode_step
+
+__all__ = ["generate", "prefill_tokens"]
+
+
+def prefill_tokens(
+    params: dict, cfg: ModelConfig, state, tokens: jax.Array
+):
+    """Feed a prompt token-by-token through the decode path (state warmup).
+
+    tokens: (B, P). Returns (state, last_logits). Token-by-token prefill is
+    the simple/robust form; chunked prefill is the production fast path for
+    full-attention archs (see make_prefill_step).
+    """
+
+    def body(st, tok):
+        logits, st = decode_step(params, cfg, st, tok)
+        return st, logits
+
+    state, logits = jax.lax.scan(body, state, tokens.T)
+    return state, logits[-1]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("cfg", "steps", "max_len", "temperature")
+)
+def generate(
+    params: dict,
+    cfg: ModelConfig,
+    prompt: jax.Array,
+    *,
+    steps: int = 32,
+    max_len: int = 1024,
+    temperature: float = 0.0,
+    rng: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Generate ``steps`` tokens after ``prompt`` (B, P). Returns (B, steps)."""
+    b = prompt.shape[0]
+    state = decode_state_init(cfg, b, max_len=max_len)
+    state, logits = prefill_tokens(params, cfg, state, prompt)
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+
+    def sample(logits, key):
+        if temperature <= 0.0:
+            return jnp.argmax(logits, -1).astype(jnp.int32)
+        return jax.random.categorical(key, logits / temperature, -1).astype(
+            jnp.int32
+        )
+
+    def body(carry, key):
+        st, lg = carry
+        tok = sample(lg, key)
+        lg2, st2 = decode_step(params, cfg, st, tok)
+        return (st2, lg2), tok
+
+    keys = jax.random.split(rng, steps)
+    (_, _), toks = jax.lax.scan(body, (state, logits), keys)
+    return toks.T  # (B, steps)

@@ -1,0 +1,109 @@
+"""Fault-tolerant checkpointing: atomic, step-indexed, keep-last-k.
+
+Write protocol (crash-safe at every point):
+  1. serialize to ``<dir>/tmp.<step>.<pid>`` (never a live name),
+  2. fsync file,
+  3. ``os.replace`` to ``<dir>/step_<n>.ckpt`` (atomic on POSIX),
+  4. update ``LATEST`` marker the same way,
+  5. GC checkpoints beyond ``keep``.
+
+Restore never trusts ``LATEST`` blindly: if the marked file is missing or
+truncated it falls back to the newest readable checkpoint — a half-written
+checkpoint can never brick a resume (this is the node-failure story: any
+worker can die at any byte).
+
+Sharded arrays are gathered to host before writing (single-writer model; a
+real multi-host deployment writes per-shard files via the same protocol —
+the container has one process, so that path is documented, not exercised).
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import re
+from typing import Any
+
+import jax
+import numpy as np
+
+__all__ = ["save", "restore", "latest_step", "list_steps"]
+
+_CKPT_RE = re.compile(r"^step_(\d+)\.ckpt$")
+
+
+def _to_host(tree: Any) -> Any:
+    return jax.tree.map(lambda x: np.asarray(jax.device_get(x)), tree)
+
+
+def save(ckpt_dir: str, step: int, state: Any, *, keep: int = 3) -> str:
+    """Atomically persist ``state`` for ``step``. Returns the final path."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    payload = {"step": int(step), "state": _to_host(state)}
+    tmp = os.path.join(ckpt_dir, f"tmp.{step}.{os.getpid()}")
+    final = os.path.join(ckpt_dir, f"step_{step}.ckpt")
+    with open(tmp, "wb") as f:
+        pickle.dump(payload, f, protocol=pickle.HIGHEST_PROTOCOL)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, final)
+
+    latest_tmp = os.path.join(ckpt_dir, f"tmp.latest.{os.getpid()}")
+    with open(latest_tmp, "w") as f:
+        f.write(str(step))
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(latest_tmp, os.path.join(ckpt_dir, "LATEST"))
+
+    for old in list_steps(ckpt_dir)[:-keep]:
+        try:
+            os.remove(os.path.join(ckpt_dir, f"step_{old}.ckpt"))
+        except OSError:
+            pass
+    return final
+
+
+def list_steps(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    steps = []
+    for name in os.listdir(ckpt_dir):
+        m = _CKPT_RE.match(name)
+        if m:
+            steps.append(int(m.group(1)))
+    return sorted(steps)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    steps = list_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def _try_load(path: str) -> dict | None:
+    try:
+        with open(path, "rb") as f:
+            return pickle.load(f)
+    except Exception:
+        return None
+
+
+def restore(ckpt_dir: str, step: int | None = None) -> tuple[Any, int] | None:
+    """Load (state, step); newest readable checkpoint wins. None if empty."""
+    candidates: list[int]
+    if step is not None:
+        candidates = [step]
+    else:
+        candidates = list(reversed(list_steps(ckpt_dir)))
+        marker = os.path.join(ckpt_dir, "LATEST")
+        if os.path.exists(marker):
+            try:
+                marked = int(open(marker).read().strip())
+                if marked in candidates:  # prefer the marker if readable
+                    candidates.remove(marked)
+                    candidates.insert(0, marked)
+            except Exception:
+                pass
+    for s in candidates:
+        payload = _try_load(os.path.join(ckpt_dir, f"step_{s}.ckpt"))
+        if payload is not None:
+            return payload["state"], payload["step"]
+    return None

@@ -1,0 +1,157 @@
+"""Jittable step functions: train (grad-accum microbatch scan + AdamW),
+prefill, and decode — shared by the real launcher and the dry-run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer
+from repro.optim.optimizers import AdamWState, adamw_init, adamw_update, global_norm
+from repro.optim import schedules
+
+__all__ = [
+    "TrainStateDict",
+    "init_train_state",
+    "make_train_step",
+    "make_prefill_step",
+    "make_decode_step",
+]
+
+TrainStateDict = dict  # {"params", "opt": AdamWState, "step": int32}
+
+
+def init_train_state(key: jax.Array, cfg: ModelConfig) -> TrainStateDict:
+    params = transformer.init_params(key, cfg)
+    return {
+        "params": params,
+        "opt": adamw_init(params, jnp.dtype(cfg.opt_dtype)),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    *,
+    num_microbatches: int = 1,
+    lr_schedule: Callable[[jax.Array], jax.Array] | None = None,
+    peak_lr: float = 3e-4,
+    batch_axes: tuple[str, ...] | None = None,
+    grad_specs: Any = None,
+) -> Callable:
+    """Returns ``train_step(state, batch) -> (state, metrics)``.
+
+    ``batch``: {"tokens": (B, S) int32} or, for frontend archs,
+    {"embeds": (B, S, d), "labels": (B, S) int32}. The global batch is split
+    into ``num_microbatches`` sequential microbatches (lax.scan) with
+    gradient accumulation in ``cfg.opt_dtype``.
+
+    ``batch_axes``: mesh axes carrying the batch dim. The (global_batch,) ->
+    (micro, batch) reshape is ambiguous to GSPMD — without an explicit
+    constraint it can shard the MICRO dim instead, replicating each
+    microbatch's compute across the data axes (observed: 16x redundant
+    compute + activation all-reduces). The constraint pins batch sharding.
+    """
+    if lr_schedule is None:
+        lr_schedule = functools.partial(schedules.constant, lr=peak_lr)
+    acc_dtype = jnp.dtype(cfg.opt_dtype)
+
+    def constrain_grads(g):
+        # Pin the accumulator to the param sharding: each microbatch's grads
+        # reduce-scatter straight into the ZeRO shards instead of
+        # all-reducing to a replicated layout (and dragging the optimizer
+        # update into an unsharded f32 layout — observed on arctic-480b).
+        if grad_specs is None:
+            return g
+        return jax.tree.map(jax.lax.with_sharding_constraint, g, grad_specs)
+
+    def loss_fn(params, mb):
+        return transformer.lm_loss(
+            params,
+            cfg,
+            tokens=mb.get("tokens"),
+            embeds=mb.get("embeds"),
+            labels=mb.get("labels"),
+        )
+
+    def train_step(state: TrainStateDict, batch: dict) -> tuple[TrainStateDict, dict]:
+        params = state["params"]
+
+        def reshape(x):
+            b = x.shape[0]
+            assert b % num_microbatches == 0, (b, num_microbatches)
+            y = x.reshape((num_microbatches, b // num_microbatches) + x.shape[1:])
+            if batch_axes:
+                from jax.sharding import PartitionSpec as P
+
+                spec = P(None, batch_axes, *([None] * (y.ndim - 2)))
+                y = jax.lax.with_sharding_constraint(y, spec)
+            return y
+
+        micro = jax.tree.map(reshape, batch)
+
+        def accum(carry, mb):
+            gsum, lsum = carry
+            loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+            gsum = jax.tree.map(
+                lambda a, g: a + g.astype(acc_dtype), gsum, grads
+            )
+            return (constrain_grads(gsum), lsum + loss), None
+
+        gzero = constrain_grads(
+            jax.tree.map(lambda p: jnp.zeros(p.shape, acc_dtype), params)
+        )
+        (gsum, lsum), _ = jax.lax.scan(accum, (gzero, jnp.zeros((), jnp.float32)), micro)
+        grads = jax.tree.map(lambda g: g / num_microbatches, gsum)
+        lr = lr_schedule(state["step"])
+        new_params, new_opt = adamw_update(params, grads, state["opt"], lr)
+        metrics = {
+            "loss": lsum / num_microbatches,
+            "grad_norm": global_norm(grads),
+            "lr": lr,
+        }
+        return (
+            {"params": new_params, "opt": new_opt, "step": state["step"] + 1},
+            metrics,
+        )
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig) -> Callable:
+    """``prefill(params, batch) -> last-position logits (B, V)``."""
+
+    def prefill_step(params, batch: dict):
+        # Compute hidden states once; head only on the final position — the
+        # serving-realistic prefill output (next-token logits).
+        x_tokens = batch.get("tokens")
+        embeds = batch.get("embeds")
+        if embeds is None:
+            x = jnp.take(params["embed"]["table"], x_tokens, axis=0)
+        else:
+            x = embeds.astype(cfg.activation_dtype)
+        h = transformer._apply_stack(params, cfg, x)
+        h = transformer.rmsnorm(params["final_norm"], h, cfg.norm_eps)
+        last = h[:, -1:, :]
+        if cfg.tie_embeddings:
+            logits = last @ params["embed"]["table"].T
+        else:
+            logits = transformer.dense(params["head"], last)
+        return transformer._mask_vocab(cfg, logits)[:, 0]
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig) -> Callable:
+    """``decode(params, state, token_batch) -> (logits, new_state)``."""
+
+    def decode(params, state, batch: dict):
+        return transformer.decode_step(
+            params, cfg, state, batch.get("token"), embed_in=batch.get("embed")
+        )
+
+    return decode

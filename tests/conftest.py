@@ -1,0 +1,11 @@
+import jax
+import pytest
+
+# Tests run on the default single-CPU backend (the 512-device override is
+# dry-run-only by design). Everything here must be fast and deterministic.
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture
+def key():
+    return jax.random.PRNGKey(0)

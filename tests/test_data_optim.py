@@ -1,0 +1,80 @@
+"""Data generators + optimizer correctness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import (
+    gen_chaotic1,
+    gen_chaotic2,
+    gen_kernel_expansion,
+    gen_nonlinear_wiener,
+)
+from repro.optim.optimizers import adamw_init, adamw_update, global_norm
+from repro.optim.schedules import warmup_cosine
+
+
+def test_generators_shapes_and_determinism(key):
+    d1 = gen_kernel_expansion(key, num_samples=100)
+    d2 = gen_kernel_expansion(key, num_samples=100)
+    np.testing.assert_array_equal(np.asarray(d1.ys), np.asarray(d2.ys))
+    assert d1.xs.shape == (100, 5)
+
+    xs, ys = gen_nonlinear_wiener(key, num_samples=50)
+    assert xs.shape == (50, 5) and ys.shape == (50,)
+
+    xs, ys = gen_chaotic1(key, num_samples=60)
+    assert xs.shape == (60, 2) and bool(jnp.all(jnp.isfinite(ys)))
+
+    xs, ys = gen_chaotic2(key, num_samples=60)
+    assert xs.shape == (60, 2) and bool(jnp.all(jnp.isfinite(ys)))
+
+
+def test_chaotic1_matches_recursion(key):
+    """y_n - eta = d_{n-1}/(1+d_{n-1}^2) + u_{n-1}^3 holds along the series."""
+    xs, ys = gen_chaotic1(key, num_samples=200, sigma_eta=0.0)
+    u_prev, d_prev = xs[:, 0], xs[:, 1]
+    want = d_prev / (1 + d_prev**2) + u_prev**3
+    np.testing.assert_allclose(np.asarray(ys), np.asarray(want), atol=1e-6)
+
+
+def test_adamw_minimizes_quadratic(key):
+    w = jax.random.normal(key, (10,))
+    target = jnp.ones(10)
+
+    def loss(w):
+        return 0.5 * jnp.sum((w - target) ** 2)
+
+    opt = adamw_init({"w": w})
+    params = {"w": w}
+    for _ in range(400):
+        g = jax.grad(lambda p: loss(p["w"]))(params)
+        params, opt = adamw_update(params, g, opt, lr=0.05, weight_decay=0.0)
+    assert float(loss(params["w"])) < 1e-3
+
+
+def test_adamw_weight_decay_shrinks_weights(key):
+    params = {"w": 5.0 * jnp.ones((4, 4))}
+    opt = adamw_init(params)
+    zeros = {"w": jnp.zeros((4, 4))}
+    p2, _ = adamw_update(params, zeros, opt, lr=0.1, weight_decay=0.5)
+    assert float(jnp.max(jnp.abs(p2["w"]))) < 5.0
+
+
+def test_grad_clip_bounds_update(key):
+    params = {"w": jnp.zeros(8)}
+    opt = adamw_init(params)
+    big = {"w": 1e6 * jnp.ones(8)}
+    assert float(global_norm(big)) > 1e6
+    p2, _ = adamw_update(params, big, opt, lr=0.1, grad_clip=1.0)
+    assert bool(jnp.all(jnp.isfinite(p2["w"])))
+
+
+def test_warmup_cosine_shape():
+    steps = jnp.arange(0, 1000)
+    lrs = jax.vmap(
+        lambda s: warmup_cosine(s, peak_lr=1.0, warmup_steps=100, total_steps=1000)
+    )(steps)
+    assert float(lrs[0]) < 0.02
+    assert abs(float(lrs[100]) - 1.0) < 0.02
+    assert float(lrs[-1]) < 0.2
+    assert float(jnp.max(lrs)) <= 1.0 + 1e-6

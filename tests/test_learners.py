@@ -1,0 +1,139 @@
+"""Online-learner behaviour: RFFKLMS, RFFKRLS, QKLMS, ALD-KRLS."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    ald_krls_run,
+    qklms_run,
+    rff_klms_batch_step,
+    rff_klms_init,
+    rff_klms_run,
+    rff_krls_run,
+    sample_rff,
+)
+from repro.core.theory import rzz_closed_form, steady_state_mse
+from repro.data.synthetic import gen_kernel_expansion, gen_nonlinear_wiener
+
+
+def _example1(n=3000, seed=3):
+    return gen_kernel_expansion(jax.random.PRNGKey(seed), num_samples=n)
+
+
+def test_klms_converges_to_theory_floor(key):
+    """Paper Fig. 1: steady-state MSE ~= Prop. 1.4 model."""
+    data = _example1(4000)
+    rff = sample_rff(key, 5, 500, sigma=5.0)
+    _, out = jax.jit(lambda: rff_klms_run(rff, data.xs, data.ys, mu=1.0))()
+    tail = float(jnp.mean(out.error[-1000:] ** 2))
+    rzz = rzz_closed_form(rff, 1.0)
+    floor = float(steady_state_mse(rzz, 1.0, 0.1))
+    start = float(jnp.mean(out.error[:100] ** 2))
+    assert tail < start / 10  # converged hard
+    assert tail < 3.0 * floor  # near the theoretical floor
+    assert tail > 0.5 * floor  # and not magically below it
+
+
+def test_klms_stability_bound(key):
+    """mu > 2/lambda_max diverges; mu < 2/lambda_max converges (Prop 1.1)."""
+    data = _example1(2000)
+    rff = sample_rff(key, 5, 100, sigma=5.0)
+    rzz = rzz_closed_form(rff, 1.0)
+    lam_max = float(jnp.linalg.eigvalsh(rzz)[-1])
+    mu_bad = 2.5 / lam_max * 2.0  # far above the bound
+    _, out_bad = rff_klms_run(rff, data.xs, data.ys, mu=mu_bad)
+    _, out_ok = rff_klms_run(rff, data.xs, data.ys, mu=1.0)
+    assert float(jnp.mean(out_ok.error[-200:] ** 2)) < 1.0
+    assert (
+        not np.isfinite(float(jnp.mean(out_bad.error[-200:] ** 2)))
+        or float(jnp.mean(out_bad.error[-200:] ** 2))
+        > 10 * float(jnp.mean(out_ok.error[-200:] ** 2))
+    )
+
+
+def test_klms_batch_step_matches_stationary_point(key):
+    """Mini-batch LMS moves theta toward the same LS solution."""
+    data = _example1(2048)
+    rff = sample_rff(key, 5, 64, sigma=5.0)
+    state = rff_klms_init(64)
+    for _ in range(6):  # a few epochs of mini-batch passes
+        for i in range(0, 2048, 256):
+            state, _ = rff_klms_batch_step(
+                state, data.xs[i : i + 256], data.ys[i : i + 256], rff, mu=1.0
+            )
+    # prediction error on fresh data beats predicting zero
+    test = gen_kernel_expansion(jax.random.PRNGKey(9), num_samples=512)
+    # note: different centers -> compare on ITS OWN training tail instead
+    from repro.core.rff import rff_features
+
+    preds = rff_features(rff, data.xs[-512:]) @ state.theta
+    mse = float(jnp.mean((preds - data.ys[-512:]) ** 2))
+    var = float(jnp.var(data.ys[-512:]))
+    assert mse < 0.5 * var
+
+
+def test_krls_beats_klms_convergence_speed(key):
+    """RLS converges faster than LMS (classic result; paper Fig. 2)."""
+    xs, ys = gen_nonlinear_wiener(jax.random.PRNGKey(5), num_samples=2000)
+    rff = sample_rff(key, 5, 200, sigma=5.0)
+    _, out_lms = jax.jit(lambda: rff_klms_run(rff, xs, ys, mu=1.0))()
+    _, out_rls = jax.jit(lambda: rff_krls_run(rff, xs, ys))()
+    early_lms = float(jnp.mean(out_lms.error[200:600] ** 2))
+    early_rls = float(jnp.mean(out_rls.error[200:600] ** 2))
+    assert early_rls < early_lms
+
+
+def test_qklms_dictionary_bounded_by_quantization(key):
+    xs, ys = gen_nonlinear_wiener(jax.random.PRNGKey(6), num_samples=2000)
+    f_coarse, _ = qklms_run(xs, ys, sigma=5.0, mu=1.0, eps=10.0, capacity=256)
+    f_fine, _ = qklms_run(xs, ys, sigma=5.0, mu=1.0, eps=2.0, capacity=256)
+    assert int(f_coarse.size) < int(f_fine.size)
+    assert int(f_coarse.size) >= 1
+
+
+def test_qklms_converges(key):
+    xs, ys = gen_nonlinear_wiener(jax.random.PRNGKey(7), num_samples=4000)
+    _, out = jax.jit(
+        lambda: qklms_run(xs, ys, sigma=5.0, mu=1.0, eps=5.0, capacity=256)
+    )()
+    assert float(jnp.mean(out.error[-500:] ** 2)) < float(
+        jnp.mean(out.error[:100] ** 2)
+    )
+
+
+def test_ald_krls_dictionary_and_convergence(key):
+    xs, ys = gen_nonlinear_wiener(jax.random.PRNGKey(8), num_samples=1500)
+    # nu=5e-3 (not the paper's 5e-4): with the near-flat sigma=5 kernel the
+    # bordered inverse is ill-conditioned; f32 needs the larger threshold
+    # (the paper ran f64 Matlab). See benchmarks/fig2b for the comparison.
+    final, out = jax.jit(
+        lambda: ald_krls_run(xs, ys, sigma=5.0, nu=5e-3, capacity=128)
+    )()
+    assert 1 <= int(final.size) <= 128
+    assert float(jnp.mean(out.error[-300:] ** 2)) < float(
+        jnp.mean(out.error[:50] ** 2)
+    )
+
+
+def test_rffkrls_matches_batch_ridge(key):
+    """With beta=1, RLS after n steps == ridge regression on those n samples
+    (textbook equivalence; strong correctness anchor for the recursion)."""
+    from repro.core.krls import rff_krls_run
+    from repro.core.rff import rff_features
+
+    xs = jax.random.normal(jax.random.PRNGKey(1), (300, 3))
+    w_true = jnp.array([0.5, -1.0, 2.0])
+    ys = xs @ w_true + 0.01 * jax.random.normal(jax.random.PRNGKey(2), (300,))
+    rff = sample_rff(key, 3, 50, sigma=2.0)
+    lam = 1e-3
+    final, _ = rff_krls_run(rff, xs, ys, lam=lam, beta=1.0)
+    z = rff_features(rff, xs)  # (n, D)
+    ridge = jnp.linalg.solve(
+        z.T @ z + lam * jnp.eye(50), z.T @ ys
+    )
+    # compare on predictions (theta itself is conditioned by Z^T Z's small
+    # eigenvalues; the fitted function is the meaningful object)
+    np.testing.assert_allclose(
+        np.asarray(z @ final.theta), np.asarray(z @ ridge), rtol=0.02,
+        atol=0.02,
+    )

@@ -1,0 +1,106 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.rff import gaussian_kernel, kernel_estimate, rff_features, sample_rff
+from repro.core.klms import lms_step
+from repro.core.distributed import dequantize_int8, quantize_int8
+from repro.kernels import ref
+
+_settings = dict(max_examples=20, deadline=None)
+
+
+@given(
+    seed=st.integers(0, 2**16),
+    d=st.integers(1, 6),
+    sigma=st.floats(0.5, 8.0),
+)
+@settings(**_settings)
+def test_kernel_estimate_bounded_and_symmetric(seed, d, sigma):
+    """z(x).z(y) is symmetric and bounded by ~2 (|cos|<=1 pairs, D avg)."""
+    key = jax.random.PRNGKey(seed)
+    rff = sample_rff(key, d, 256, sigma)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (4, d))
+    y = jax.random.normal(jax.random.PRNGKey(seed + 2), (4, d))
+    kxy = kernel_estimate(rff, x, y)
+    kyx = kernel_estimate(rff, y, x)
+    np.testing.assert_allclose(np.asarray(kxy), np.asarray(kyx), atol=1e-5)
+    assert float(jnp.max(jnp.abs(kxy))) <= 2.0 + 1e-5
+
+
+@given(seed=st.integers(0, 2**16), n=st.integers(4, 32))
+@settings(**_settings)
+def test_rff_gram_matrix_psd(seed, n):
+    """Gram matrix of explicit features is PSD by construction — the
+    reason RFF needs no dictionary pruning to stay well-posed."""
+    key = jax.random.PRNGKey(seed)
+    rff = sample_rff(key, 3, 64, 2.0)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (n, 3))
+    z = rff_features(rff, x)
+    gram = z @ z.T
+    eig = jnp.linalg.eigvalsh(gram)
+    assert float(eig[0]) > -1e-5
+
+
+@given(
+    seed=st.integers(0, 2**16),
+    mu=st.floats(0.05, 0.9),
+)
+@settings(**_settings)
+def test_lms_step_reduces_instantaneous_error(seed, mu):
+    """After one LMS update, the error on the SAME sample shrinks by exactly
+    (1 - mu ||z||^2) — the contraction that drives convergence."""
+    key = jax.random.PRNGKey(seed)
+    z = jax.random.normal(key, (16,))
+    z = z / jnp.linalg.norm(z)  # ||z|| = 1 -> contraction factor (1 - mu)
+    theta = jax.random.normal(jax.random.PRNGKey(seed + 1), (16,))
+    y = jnp.asarray(0.7)
+    theta2, out = lms_step(theta, z, y, mu)
+    err_after = float(y - theta2 @ z)
+    assert abs(err_after - (1 - mu) * float(out.error)) < 1e-5
+
+
+@given(seed=st.integers(0, 2**16))
+@settings(**_settings)
+def test_int8_quantization_roundtrip_bound(seed):
+    v = 3.0 * jax.random.normal(jax.random.PRNGKey(seed), (256,))
+    q, s = quantize_int8(v)
+    err = jnp.abs(dequantize_int8(q, s) - v)
+    assert float(jnp.max(err)) <= float(s) * 0.5 + 1e-6
+
+
+@given(
+    seed=st.integers(0, 2**16),
+    s=st.sampled_from([16, 48]),
+    dv=st.sampled_from([4, 8]),
+)
+@settings(**_settings)
+def test_linear_attention_causality(seed, s, dv):
+    """Output at position t never depends on inputs after t."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    q = jax.nn.relu(jax.random.normal(ks[0], (1, s, 8))) + 0.05
+    k = jax.nn.relu(jax.random.normal(ks[1], (1, s, 8))) + 0.05
+    v = jax.random.normal(ks[2], (1, s, dv))
+    out1 = ref.rff_attention_ref(q, k, v)
+    # perturb the future of the last-but-one position
+    k2 = k.at[:, -1].set(k[:, -1] + 10.0)
+    v2 = v.at[:, -1].set(-v[:, -1])
+    out2 = ref.rff_attention_ref(q, k2, v2)
+    np.testing.assert_allclose(
+        np.asarray(out1[:, :-1]), np.asarray(out2[:, :-1]), atol=1e-5
+    )
+
+
+@given(seed=st.integers(0, 2**16), steps=st.integers(1, 30))
+@settings(**_settings)
+def test_data_pipeline_seekable(seed, steps):
+    """batch_at_step is a pure function: seeking == streaming."""
+    from repro.data.lm_data import batch_at_step
+
+    a = batch_at_step(seed, steps, global_batch=2, seq_len=8, vocab=97)
+    b = batch_at_step(seed, steps, global_batch=2, seq_len=8, vocab=97)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert int(a.max()) < 97 and int(a.min()) >= 0

@@ -1,0 +1,93 @@
+"""Serving-loop integration: generation across state families + training
+actually reduces loss end-to-end (the e2e driver contract)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import (
+    decode_state_init,
+    decode_step,
+    forward,
+    init_params,
+    with_rff_attention,
+)
+from repro.serve import generate
+
+
+@pytest.mark.parametrize(
+    "arch", ["qwen2-0.5b", "mamba2-130m", "recurrentgemma-2b"]
+)
+def test_generate_shapes_and_determinism(arch, key):
+    cfg = get_config(arch).reduced()
+    params = init_params(key, cfg)
+    prompt = jax.random.randint(key, (2, 5), 0, cfg.vocab_size)
+    out1 = generate(params, cfg, prompt, steps=8, max_len=32)
+    out2 = generate(params, cfg, prompt, steps=8, max_len=32)
+    assert out1.shape == (2, 8)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+    assert int(out1.max()) < cfg.padded_vocab
+
+
+def test_generate_greedy_matches_manual_loop(key):
+    """generate() == hand-rolled prefill+decode loop (pins scan plumbing)."""
+    cfg = get_config("llama3-8b").reduced()
+    params = init_params(key, cfg)
+    prompt = jax.random.randint(key, (1, 4), 0, cfg.vocab_size)
+
+    state = decode_state_init(cfg, 1, max_len=32)
+    lg = None
+    for t in range(4):
+        lg, state = decode_step(params, cfg, state, prompt[:, t])
+    toks = []
+    tok = jnp.argmax(lg, -1).astype(jnp.int32)
+    for _ in range(6):
+        toks.append(tok)
+        lg, state = decode_step(params, cfg, state, tok)
+        tok = jnp.argmax(lg, -1).astype(jnp.int32)
+    manual = jnp.stack(toks, 1)
+
+    fast = generate(params, cfg, prompt, steps=6, max_len=32)
+    np.testing.assert_array_equal(np.asarray(fast), np.asarray(manual))
+
+
+def test_rff_generation_runs(key):
+    cfg = with_rff_attention(get_config("llama3-8b").reduced())
+    params = init_params(key, cfg)
+    prompt = jax.random.randint(key, (2, 3), 0, cfg.vocab_size)
+    out = generate(params, cfg, prompt, steps=5, max_len=16)
+    assert out.shape == (2, 5)
+
+
+def test_training_reduces_loss_end_to_end(key, tmp_path):
+    """A few hundred steps of the e2e driver measurably reduce loss on the
+    structured synthetic stream (deliverable (b): train a model end-to-end)."""
+    from repro.data.lm_data import batch_at_step
+    from repro.train.trainer import Trainer, TrainerConfig
+
+    cfg = get_config("qwen2-0.5b").reduced()
+
+    def batch_fn(step):
+        return {
+            "tokens": batch_at_step(
+                0, step, global_batch=4, seq_len=32, vocab=cfg.vocab_size
+            )
+        }
+
+    t = Trainer(
+        cfg,
+        TrainerConfig(total_steps=40, ckpt_every=1000, log_every=1000,
+                      ckpt_dir=str(tmp_path), num_microbatches=2,
+                      peak_lr=3e-3),
+        batch_fn,
+    )
+    t.init_or_resume()
+    # loss at step 0 vs trained
+    from repro.models import lm_loss
+
+    b0 = batch_fn(0)["tokens"]
+    loss0 = float(lm_loss(t.state["params"], cfg, tokens=b0))
+    t.run()
+    loss1 = float(lm_loss(t.state["params"], cfg, tokens=b0))
+    assert loss1 < loss0 - 0.5, (loss0, loss1)

@@ -1,0 +1,59 @@
+"""Convergence-theory oracles (paper Lemma 1 / Prop. 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.rff import sample_rff
+from repro.core.theory import (
+    max_stable_mu,
+    mse_evolution,
+    rzz_closed_form,
+    rzz_monte_carlo,
+    steady_state_mse,
+    theta_opt,
+)
+
+
+def test_rzz_closed_form_matches_monte_carlo(key):
+    rff = sample_rff(key, 4, 40, sigma=3.0)
+    cf = rzz_closed_form(rff, sigma_x=1.3)
+    mc = rzz_monte_carlo(rff, 1.3, jax.random.PRNGKey(1), 150_000)
+    np.testing.assert_allclose(np.asarray(cf), np.asarray(mc), atol=5e-3)
+
+
+def test_rzz_positive_definite(key):
+    """Lemma 1: distinct omegas -> strictly PD."""
+    rff = sample_rff(key, 4, 60, sigma=2.0)
+    eig = jnp.linalg.eigvalsh(rzz_closed_form(rff, 1.0))
+    assert float(eig[0]) > 0
+
+
+def test_max_stable_mu_positive(key):
+    rff = sample_rff(key, 5, 64, sigma=5.0)
+    mu = float(max_stable_mu(rzz_closed_form(rff, 1.0)))
+    assert mu > 0
+
+
+def test_theta_opt_predicts_noise_free_targets(key):
+    """Eq. (8): theta_opt ~ Z_C a reproduces the kernel expansion."""
+    from repro.core.rff import gaussian_kernel, rff_features
+
+    rff = sample_rff(key, 4, 4096, sigma=3.0)
+    centers = jax.random.normal(jax.random.PRNGKey(1), (6, 4))
+    coeffs = jax.random.normal(jax.random.PRNGKey(2), (6,))
+    th = theta_opt(rff, centers, coeffs)
+    x = jax.random.normal(jax.random.PRNGKey(3), (64, 4))
+    target = gaussian_kernel(x[:, None, :], centers[None], 3.0) @ coeffs
+    pred = rff_features(rff, x) @ th
+    assert float(jnp.sqrt(jnp.mean((pred - target) ** 2))) < 0.15
+
+
+def test_mse_evolution_decreasing_then_flat(key):
+    rff = sample_rff(key, 4, 32, sigma=3.0)
+    rzz = rzz_closed_form(rff, 1.0)
+    a0 = jnp.eye(32) * 1.0
+    js = mse_evolution(rzz, a0, mu=0.5, sigma_eta=0.1, num_steps=4000)
+    assert float(js[0]) > float(js[-1])
+    # settles near the closed-form steady state
+    ss = float(steady_state_mse(rzz, 0.5, 0.1))
+    assert abs(float(js[-1]) - ss) / ss < 0.2
