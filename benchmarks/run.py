@@ -10,7 +10,7 @@ import argparse
 import json
 import sys
 
-from benchmarks import kernels_bench, paper, roofline_report
+from benchmarks import bank_bench, kernels_bench, paper, roofline_report
 
 
 def main() -> None:
@@ -31,6 +31,8 @@ def main() -> None:
         "orf_vs_iid": lambda: paper.orf_vs_iid(num_seeds=8 * scale),
         "kernel_rff_features": kernels_bench.bench_rff_features,
         "kernel_rff_attention": kernels_bench.bench_rff_attention,
+        "bank_fused_vs_twopass": bank_bench.bench_bank_fused_vs_twopass,
+        "bank_streams": bank_bench.bench_bank_streams,
         "roofline": roofline_report.roofline_table,
     }
     print("name,us_per_call,derived")

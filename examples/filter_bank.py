@@ -1,0 +1,66 @@
+"""Multi-tenant filter bank: 64 concurrent RFFKLMS streams, one jitted call.
+
+Two serving patterns on synthetic nonlinear-Wiener traffic:
+
+* per-tenant isolation — 64 tenants, shared hyperparams, each filter sees
+  only its own stream;
+* step-size sweep — the same stream replicated across the bank with a
+  per-filter mu grid, picking the best mu in a single pass.
+
+Run: PYTHONPATH=src python examples/filter_bank.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import klms_learner, sample_rff
+from repro.core.bank import bank_init, bank_run
+from repro.serve import make_bank_server, serve_bank_stream
+from repro.data.synthetic import gen_nonlinear_wiener
+
+
+def main():
+    bank, n, d, dfeat = 64, 1000, 5, 200
+    rff = sample_rff(jax.random.PRNGKey(0), d, dfeat, sigma=5.0)
+
+    # --- per-tenant isolation: 64 independent streams --------------------
+    xs_all, ys_all = gen_nonlinear_wiener(
+        jax.random.PRNGKey(1), num_samples=bank * n
+    )
+    xs = xs_all.reshape(bank, n, -1)
+    ys = ys_all.reshape(bank, n)
+
+    final, outs = serve_bank_stream(rff, xs, ys, mu=0.5)
+    tail_mse = jnp.mean(outs.error[:, -200:] ** 2, axis=1)
+    print(f"{bank} tenants, {n} ticks each, one jitted call")
+    print(f"  tail MSE: mean={float(jnp.mean(tail_mse)):.4f} "
+          f"worst={float(jnp.max(tail_mse)):.4f}")
+
+    # --- per-tick serving (the online loop a real server runs) -----------
+    tick = make_bank_server(rff, mu=0.5)
+    state = jax.tree.map(jnp.zeros_like, final)
+    for t in range(3):
+        state, out = tick(state, xs[:, t], ys[:, t])
+    print(f"  per-tick server: 3 ticks, mean |e| = "
+          f"{float(jnp.mean(jnp.abs(out.error))):.4f}")
+
+    # --- hyperparameter sweep: same stream, per-filter mu grid ------------
+    mus = jnp.linspace(0.05, 1.5, bank)
+    xs_rep = jnp.broadcast_to(xs[0], (bank,) + xs[0].shape)
+    ys_rep = jnp.broadcast_to(ys[0], (bank,) + ys[0].shape)
+    _, sweep = serve_bank_stream(rff, xs_rep, ys_rep, mu=mus)
+    sweep_mse = jnp.mean(sweep.error[:, -200:] ** 2, axis=1)
+    best = int(jnp.argmin(sweep_mse))
+    print(f"mu sweep over {bank} candidates in one pass: "
+          f"best mu={float(mus[best]):.3f} "
+          f"(tail MSE {float(sweep_mse[best]):.4f})")
+
+    # --- the generic bank drives any OnlineLearner the same way ----------
+    learner = klms_learner(rff, mu=0.5)
+    states = bank_init(learner, bank)
+    _, outs_g = jax.jit(lambda s: bank_run(learner, s, xs, ys))(states)
+    drift = float(jnp.max(jnp.abs(outs_g.error - outs.error)))
+    print(f"generic bank_run == fused serve path (max |diff| = {drift:.2e})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# Tier-1 test runner. Usage:
+#   scripts/run_tests.sh           # full suite (the tier-1 verify command)
+#   scripts/run_tests.sh --fast    # skip @pytest.mark.slow tests (CI hot loop)
+# Extra args are forwarded to pytest, e.g. scripts/run_tests.sh --fast -k bank
+set -euo pipefail
+
+REPO="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
+export PYTHONPATH="${REPO}/src${PYTHONPATH:+:$PYTHONPATH}"
+
+ARGS=(-x -q)
+if [[ "${1:-}" == "--fast" ]]; then
+  shift
+  ARGS+=(-m "not slow")
+fi
+
+exec python -m pytest "${ARGS[@]}" "$@"

@@ -2,8 +2,9 @@
 
 RFF feature maps (rff), RFFKLMS (klms), RFFKRLS (krls), the paper's baselines
 QKLMS (qklms) and Engel's ALD-KRLS (krls_ald), the convergence theory oracles
-(theory), Monte-Carlo drivers (adaptive) and diffusion-distributed variants
-(distributed).
+(theory), Monte-Carlo drivers (adaptive), diffusion-distributed variants
+(distributed), the unified OnlineLearner interface (learner) and the vmapped
+multi-stream filter bank (bank).
 """
 from repro.core.rff import (
     RFF,
@@ -30,9 +31,39 @@ from repro.core.krls_ald import (
     ald_krls_step,
     ald_krls_run,
 )
+from repro.core.learner import (
+    OnlineLearner,
+    klms_learner,
+    nklms_learner,
+    krls_learner,
+    qklms_learner,
+    ald_krls_learner,
+)
+from repro.core.bank import (
+    bank_init,
+    bank_step,
+    bank_run,
+    bank_predict,
+    klms_bank_init,
+    klms_bank_step,
+    klms_bank_run,
+)
 from repro.core import theory, adaptive, distributed
 
 __all__ = [
+    "OnlineLearner",
+    "klms_learner",
+    "nklms_learner",
+    "krls_learner",
+    "qklms_learner",
+    "ald_krls_learner",
+    "bank_init",
+    "bank_step",
+    "bank_run",
+    "bank_predict",
+    "klms_bank_init",
+    "klms_bank_step",
+    "klms_bank_run",
     "RFF",
     "sample_rff",
     "rff_features",

@@ -1,0 +1,139 @@
+"""Filter-bank engine: B independent online learners as one batched program.
+
+The serving scenario the ROADMAP asks for: many concurrent streams (one
+filter per tenant, or one per hyperparameter in a sweep) driven in lockstep
+by a *single* jitted call. Because every learner state is a fixed-size pytree
+(the paper's whole point), ``jax.vmap`` turns B filters into one batched
+state whose leaves carry a leading bank axis — no padding, no ragged
+dictionaries, one XLA program regardless of B.
+
+Two tiers:
+
+* Generic (any ``OnlineLearner``): :func:`bank_init` / :func:`bank_step` /
+  :func:`bank_run` / :func:`bank_predict` — vmapped adapter calls.
+* Fused KLMS fast path: :func:`klms_bank_run` — the bank shares one RFF
+  feature map and steps through ``kernels.rff_klms_bank_step`` (the Pallas
+  kernel that keeps the feature block in VMEM), with per-filter ``mu``
+  supported for step-size sweeps.
+
+Time is the scan axis and the bank is the batch axis, so the per-tick
+program is exactly the serving hot loop (serve/bank_loop.py wraps it).
+"""
+from __future__ import annotations
+
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.klms import LMSState, StepOut, rff_klms_init
+from repro.core.learner import OnlineLearner
+from repro.core.rff import RFF
+from repro.kernels import ops
+
+__all__ = [
+    "bank_init",
+    "bank_step",
+    "bank_run",
+    "bank_predict",
+    "klms_bank_init",
+    "klms_bank_step",
+    "klms_bank_run",
+]
+
+
+def bank_init(
+    learner: OnlineLearner, size: int, key: Optional[jax.Array] = None
+):
+    """Batched state for ``size`` independent filters (leading bank axis)."""
+    keys = jax.random.split(
+        key if key is not None else jax.random.PRNGKey(0), size
+    )
+    return jax.vmap(learner.init_fn)(keys)
+
+
+def bank_step(learner: OnlineLearner, states, xs: jax.Array, ys: jax.Array):
+    """One lockstep tick: ``xs (B, d)``, ``ys (B,)`` -> batched (state, out)."""
+    return jax.vmap(learner.step_fn)(states, xs, ys)
+
+
+def bank_run(learner: OnlineLearner, states, xs: jax.Array, ys: jax.Array):
+    """Drive B streams ``xs (B, n, d)``, ``ys (B, n)`` under one scan.
+
+    Scan runs over time with a vmapped step inside (lockstep streams — the
+    serving schedule), which compiles to the same program as vmapping
+    ``learner.run``. Returns (batched final state, StepOut arrays ``(B, n)``).
+    """
+
+    def body(s, xy):
+        return bank_step(learner, s, *xy)
+
+    xs_t = jnp.swapaxes(xs, 0, 1)  # (n, B, d) time-major
+    ys_t = jnp.swapaxes(ys, 0, 1)  # (n, B)
+    states, outs = jax.lax.scan(body, states, (xs_t, ys_t))
+    return states, jax.tree.map(lambda a: jnp.swapaxes(a, 0, 1), outs)
+
+
+def bank_predict(learner: OnlineLearner, states, xs: jax.Array) -> jax.Array:
+    """Batched inference: one ``x (d,)`` per filter, ``xs (B, d)``."""
+    return jax.vmap(learner.predict_fn)(states, xs)
+
+
+# ---------------------------------------------------------------------------
+# Fused KLMS bank — shared feature map, Pallas hot path.
+# ---------------------------------------------------------------------------
+
+
+def klms_bank_init(
+    rff: RFF, size: int, dtype: Optional[jnp.dtype] = None
+) -> LMSState:
+    """Batched ``LMSState`` with ``theta (B, D)`` for the fused path."""
+    single = rff_klms_init(rff.num_features, dtype or rff.omega.dtype)
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (size,) + a.shape), single
+    )
+
+
+def klms_bank_step(
+    state: LMSState,
+    xs: jax.Array,
+    ys: jax.Array,
+    rff: RFF,
+    mu: Union[float, jax.Array],
+    mode: str = "auto",
+) -> tuple[LMSState, StepOut]:
+    """One fused tick for the whole bank: ``xs (B, d)``, ``ys (B,)``."""
+    theta, pred, err = ops.rff_klms_bank_step(
+        state.theta, xs, ys, rff.omega, rff.bias, mu, mode=mode
+    )
+    return (
+        LMSState(theta=theta, step=state.step + 1),
+        StepOut(prediction=pred, error=err),
+    )
+
+
+def klms_bank_run(
+    rff: RFF,
+    xs: jax.Array,
+    ys: jax.Array,
+    mu: Union[float, jax.Array],
+    state: Optional[LMSState] = None,
+    mode: str = "auto",
+) -> tuple[LMSState, StepOut]:
+    """Serve B KLMS streams ``xs (B, n, d)``, ``ys (B, n)`` in one jit.
+
+    ``mu`` may be a scalar (per-tenant isolation with shared hyperparams) or
+    ``(B,)`` (step-size sweep: one stream per candidate mu). Matches B
+    sequential ``rff_klms_run`` calls numerically (tested).
+    """
+    if state is None:
+        state = klms_bank_init(rff, xs.shape[0])
+
+    def body(s, xy):
+        x_t, y_t = xy
+        return klms_bank_step(s, x_t, y_t, rff, mu, mode=mode)
+
+    xs_t = jnp.swapaxes(xs, 0, 1)
+    ys_t = jnp.swapaxes(ys, 0, 1)
+    state, outs = jax.lax.scan(body, state, (xs_t, ys_t))
+    return state, jax.tree.map(lambda a: jnp.swapaxes(a, 0, 1), outs)

@@ -28,7 +28,13 @@ import jax.numpy as jnp
 
 from repro.core.klms import StepOut
 
-__all__ = ["ALDKRLSState", "ald_krls_init", "ald_krls_step", "ald_krls_run"]
+__all__ = [
+    "ALDKRLSState",
+    "ald_krls_init",
+    "ald_krls_step",
+    "ald_krls_run",
+    "ald_krls_predict",
+]
 
 
 class ALDKRLSState(NamedTuple):
@@ -56,6 +62,19 @@ def ald_krls_init(
 def _gauss_vec(centers: jax.Array, x: jax.Array, sigma: float) -> jax.Array:
     sq = jnp.sum(jnp.square(centers - x[None, :]), axis=-1)
     return jnp.exp(-sq / (2.0 * sigma**2))
+
+
+def ald_krls_predict(
+    state: ALDKRLSState, x: jax.Array, sigma: float
+) -> jax.Array:
+    """f(x) = sum_k alpha_k kappa(c_k, x) over occupied slots.
+
+    Same masked dot (and accumulation order) as the prediction inside
+    ald_krls_step.
+    """
+    occ = (jnp.arange(state.centers.shape[0]) < state.size).astype(x.dtype)
+    kvec = _gauss_vec(state.centers, x, sigma) * occ
+    return kvec @ state.alpha
 
 
 def ald_krls_step(

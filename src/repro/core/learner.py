@@ -1,0 +1,156 @@
+"""Unified ``OnlineLearner`` interface over every kernel adaptive filter.
+
+The five algorithms in core/ (RFFKLMS, normalized RFFKLMS, QKLMS, RFFKRLS,
+ALD-KRLS) historically exposed ad-hoc ``*_init/_step/_run`` signatures. This
+module wraps each behind one protocol:
+
+    init(key) -> state                    (key ignored by deterministic inits)
+    step(state, x, y) -> (state, StepOut) (one online sample)
+    run(state, xs, ys) -> (state, StepOut arrays)   (lax.scan stream drive)
+    predict(state, x) -> y_hat            (inference, no update)
+
+so drivers, benchmarks, the vmapped filter bank (core/bank.py) and the
+serving loop never branch on the algorithm. Adapters are thin closures over
+the existing pure functions — the legacy API stays available and every
+adapter is numerically identical to the ``rff_*_run`` it wraps (tested).
+
+The design also makes the *feature family* a constructor argument ("No-Trick
+Kernel Adaptive Filtering using Deterministic Features" motivates swapping
+RFF for deterministic maps): any ``RFF``-shaped parameter struct works, and a
+future deterministic-feature family only needs to provide the same
+``rff_features`` contract.
+
+An ``OnlineLearner`` is a static bundle of pure functions — close over it in
+jitted code (don't pass it as a traced argument); only ``state`` is a pytree.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.klms import (
+    StepOut,
+    rff_klms_init,
+    rff_klms_step,
+    rff_nklms_step,
+)
+from repro.core.krls import rff_krls_init, rff_krls_step
+from repro.core.krls_ald import ald_krls_init, ald_krls_predict, ald_krls_step
+from repro.core.qklms import qklms_init, qklms_predict, qklms_step
+from repro.core.rff import RFF, rff_features
+
+__all__ = [
+    "OnlineLearner",
+    "klms_learner",
+    "nklms_learner",
+    "krls_learner",
+    "qklms_learner",
+    "ald_krls_learner",
+]
+
+
+@dataclass(frozen=True)
+class OnlineLearner:
+    """Algorithm-agnostic online learner: three pure functions + a driver.
+
+    Attributes:
+      init_fn: ``(key | None) -> state`` — fresh filter state.
+      step_fn: ``(state, x, y) -> (state, StepOut)`` — one online update.
+      predict_fn: ``(state, x) -> y_hat`` — inference without updating.
+    """
+
+    init_fn: Callable
+    step_fn: Callable
+    predict_fn: Callable
+
+    def init(self, key: Optional[jax.Array] = None):
+        return self.init_fn(key)
+
+    def step(self, state, x: jax.Array, y: jax.Array):
+        return self.step_fn(state, x, y)
+
+    def predict(self, state, x: jax.Array) -> jax.Array:
+        return self.predict_fn(state, x)
+
+    def run(self, state, xs: jax.Array, ys: jax.Array):
+        """Drive the filter over a stream ``xs (n, d)``, ``ys (n,)``.
+
+        ``state=None`` starts fresh. Returns (final state, per-step StepOut
+        arrays) — ``out.error**2`` is the learning-curve quantity.
+        """
+        if state is None:
+            state = self.init()
+
+        def body(s, xy):
+            return self.step_fn(s, *xy)
+
+        return jax.lax.scan(body, state, (xs, ys))
+
+
+def klms_learner(rff: RFF, mu: float) -> OnlineLearner:
+    """RFFKLMS (paper §4): fixed-size theta, per-step O(D d)."""
+    return OnlineLearner(
+        init_fn=lambda key=None: rff_klms_init(
+            rff.num_features, rff.omega.dtype
+        ),
+        step_fn=lambda s, x, y: rff_klms_step(s, (x, y), rff, mu),
+        predict_fn=lambda s, x: rff_features(rff, x) @ s.theta,
+    )
+
+
+def nklms_learner(rff: RFF, mu: float, eps: float = 1e-6) -> OnlineLearner:
+    """Normalized RFFKLMS: mu_eff = mu / (eps + ||z||^2)."""
+    return OnlineLearner(
+        init_fn=lambda key=None: rff_klms_init(
+            rff.num_features, rff.omega.dtype
+        ),
+        step_fn=lambda s, x, y: rff_nklms_step(s, (x, y), rff, mu, eps),
+        predict_fn=lambda s, x: rff_features(rff, x) @ s.theta,
+    )
+
+
+def krls_learner(
+    rff: RFF, lam: float = 1e-4, beta: float = 0.9995
+) -> OnlineLearner:
+    """RFFKRLS (paper §6): fixed (D,) theta + (D, D) inverse correlation."""
+    return OnlineLearner(
+        init_fn=lambda key=None: rff_krls_init(
+            rff.num_features, lam, rff.omega.dtype
+        ),
+        step_fn=lambda s, x, y: rff_krls_step(s, (x, y), rff, beta),
+        predict_fn=lambda s, x: rff_features(rff, x) @ s.theta,
+    )
+
+
+def qklms_learner(
+    input_dim: int,
+    sigma: float,
+    mu: float,
+    eps: float,
+    capacity: int = 512,
+    dtype: jnp.dtype = jnp.float32,
+) -> OnlineLearner:
+    """QKLMS baseline (growing dictionary, fixed-capacity buffer)."""
+    return OnlineLearner(
+        init_fn=lambda key=None: qklms_init(capacity, input_dim, dtype),
+        step_fn=lambda s, x, y: qklms_step(s, (x, y), sigma, mu, eps),
+        predict_fn=lambda s, x: qklms_predict(s, x, sigma),
+    )
+
+
+def ald_krls_learner(
+    input_dim: int,
+    sigma: float,
+    nu: float = 5e-4,
+    capacity: int = 256,
+    dtype: jnp.dtype = jnp.float32,
+) -> OnlineLearner:
+    """Engel's ALD-KRLS baseline (growing dictionary, O(M^2) per step)."""
+    return OnlineLearner(
+        init_fn=lambda key=None: ald_krls_init(capacity, input_dim, dtype),
+        step_fn=lambda s, x, y: ald_krls_step(s, (x, y), sigma, nu),
+        predict_fn=lambda s, x: ald_krls_predict(s, x, sigma),
+    )

@@ -1,6 +1,8 @@
 """Pallas TPU kernels for the perf-critical compute layers.
 
 ``rff_features``: fused feature-map GEMM+cos (the paper's O(Dd) hot spot).
+``rff_klms_bank_step``: fully-fused KLMS step (featurize+predict+update) for
+a bank of B filters — the serving hot path; z never leaves VMEM.
 ``rff_attention``: chunked causal linear attention with fixed-size VMEM state
 (the paper's insight applied to the attention kernel).
 ``flash_attention``: blocked online-softmax attention (the full-attention
@@ -15,12 +17,14 @@ from repro.kernels.ops import (
     rff_attention,
     rff_attention_decode,
     rff_features,
+    rff_klms_bank_step,
 )
 
 __all__ = [
     "ops",
     "ref",
     "rff_features",
+    "rff_klms_bank_step",
     "rff_attention",
     "rff_attention_decode",
     "flash_attention",

@@ -15,11 +15,13 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.rff_features import rff_features_pallas
 from repro.kernels.rff_attention import rff_attention_pallas
+from repro.kernels.rff_klms_step import rff_klms_bank_step_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 
 __all__ = [
     "default_backend",
     "rff_features",
+    "rff_klms_bank_step",
     "rff_attention",
     "rff_attention_decode",
     "flash_attention",
@@ -67,6 +69,32 @@ def rff_features(
         interpret=interpret,
     )
     return out.reshape(*lead, w.shape[-1])
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "block_b"))
+def rff_klms_bank_step(
+    theta: jax.Array,
+    x: jax.Array,
+    y: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    mu: jax.Array | float,
+    *,
+    mode: str = "auto",
+    block_b: int = 8,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused featurize+predict+update KLMS step for a bank of B filters.
+
+    theta (B, D), x (B, d), y (B,), shared w (d, D) / b (D,), mu scalar or
+    (B,). Returns (theta_new, predictions, prior errors).
+    """
+    use_pallas, interpret = _use_pallas(mode)
+    if not use_pallas:
+        return ref.rff_klms_bank_step_ref(theta, x, y, w, b, mu)
+    return rff_klms_bank_step_pallas(
+        theta, x, y, w, b, jnp.asarray(mu, theta.dtype),
+        block_b=block_b, interpret=interpret,
+    )
 
 
 @functools.partial(

@@ -8,6 +8,7 @@ import jax.numpy as jnp
 
 __all__ = [
     "rff_features_ref",
+    "rff_klms_bank_step_ref",
     "rff_attention_ref",
     "rff_attention_state_ref",
     "flash_attention_ref",
@@ -18,6 +19,19 @@ def rff_features_ref(x, w, b):
     """sqrt(2/D) cos(x @ w + b) — oracle for kernels/rff_features.py."""
     d = w.shape[1]
     return jnp.sqrt(2.0 / d).astype(x.dtype) * jnp.cos(x @ w + b)
+
+
+def rff_klms_bank_step_ref(theta, x, y, w, b, mu):
+    """Two-pass fused-KLMS-step oracle — for kernels/rff_klms_step.py.
+
+    theta (B, D), x (B, d), y (B,), mu scalar or (B,). Materializes the
+    feature block z (the HBM round-trip the fused kernel removes).
+    """
+    z = rff_features_ref(x, w, b)  # (B, D)
+    pred = jnp.sum(theta * z, axis=-1)
+    err = y - pred
+    mu = jnp.broadcast_to(jnp.asarray(mu, theta.dtype), err.shape)
+    return theta + (mu * err)[:, None] * z, pred, err
 
 
 def rff_attention_ref(phi_q, phi_k, v, normalize=True, eps=1e-6):

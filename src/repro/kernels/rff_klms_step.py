@@ -1,0 +1,135 @@
+"""Pallas TPU kernel: fully-fused RFF-KLMS step for a bank of B filters.
+
+The per-step hot path of the paper's Algorithm (§4) is, per stream,
+
+    z     = sqrt(2/D) cos(W^T x + b)      (feature map, O(D d))
+    y_hat = theta^T z                      (predict)
+    e     = y - y_hat                      (prior error)
+    theta <- theta + mu e z                (LMS update)
+
+Run two-pass (feature kernel, then update) this costs two HBM round-trips of
+the ``(B, D)`` activation ``z`` plus a second read of ``theta``. Fused, ``z``
+never leaves VMEM: one read of ``x``/``W``/``b``/``theta``, one write of the
+updated ``theta`` — the arithmetic intensity the serving bank needs.
+
+TPU mapping:
+  * grid over blocks of the bank axis B only; each grid step owns ``block_b``
+    filters end-to-end (their full ``(block_b, D)`` theta row-block), so the
+    predict-reduction over D and the dependent update happen entirely in VMEM
+    with no cross-block communication;
+  * the projection ``x @ W`` runs on the MXU in f32; cos / dot / axpy are VPU
+    work on the same tile;
+  * ``W (d, D)`` is grid-invariant (index_map pins it to block (0, 0)), so
+    Pallas fetches it once and re-uses the same VMEM tile across the bank —
+    the "one HBM read of W" property. VMEM budget: W d*D f32 (e.g.
+    128x2048 = 1 MiB) + 3 theta/z tiles of block_b*D ≈ well under 16 MiB.
+
+Padding (all exact): the contraction dim d zero-pads x columns / W rows
+(adds 0 to the projection); padded D columns produce garbage z but the
+*input* theta is zero there so the prediction is untouched, and the wrapper
+slices the updated theta back to the true D; padded B rows are sliced off.
+
+``mu`` is an array ``(B,)`` — per-filter step sizes, the hyperparameter-sweep
+axis of the filter bank — broadcast from a scalar by the wrapper.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.rff_features import _ceil_to, _pad2
+
+__all__ = ["rff_klms_step_kernel", "rff_klms_bank_step_pallas"]
+
+
+def rff_klms_step_kernel(
+    x_ref, w_ref, b_ref, theta_ref, y_ref, mu_ref, theta_out_ref, pred_ref,
+    err_ref, *, scale: float
+):
+    """One bank-block: featurize, predict, error, update — all in VMEM."""
+    proj = jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ) + b_ref[...].astype(jnp.float32)
+    z = scale * jnp.cos(proj)  # (bb, D) — never written to HBM
+    theta = theta_ref[...].astype(jnp.float32)
+    pred = jnp.sum(theta * z, axis=1, keepdims=True)  # (bb, 1)
+    err = y_ref[...].astype(jnp.float32) - pred
+    theta_out_ref[...] = (
+        theta + mu_ref[...].astype(jnp.float32) * err * z
+    ).astype(theta_out_ref.dtype)
+    pred_ref[...] = pred.astype(pred_ref.dtype)
+    err_ref[...] = err.astype(err_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def rff_klms_bank_step_pallas(
+    theta: jax.Array,
+    x: jax.Array,
+    y: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    mu: jax.Array,
+    *,
+    block_b: int = 8,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Fused KLMS step for B independent filters sharing one feature map.
+
+    Args:
+      theta: ``(B, D)`` per-filter solutions.
+      x: ``(B, d)`` one input sample per filter/stream.
+      y: ``(B,)`` targets.
+      w: ``(d, D)`` shared spectral matrix.
+      b: ``(D,)`` shared phases.
+      mu: scalar or ``(B,)`` per-filter step sizes.
+
+    Returns:
+      (theta_new ``(B, D)``, predictions ``(B,)``, prior errors ``(B,)``).
+    """
+    bsz, dfeat = theta.shape
+    d = x.shape[-1]
+    assert x.shape == (bsz, d) and y.shape == (bsz,)
+    assert w.shape == (d, dfeat) and b.shape == (dfeat,)
+    scale = float((2.0 / dfeat) ** 0.5)  # true D, not padded
+
+    bb = min(block_b, _ceil_to(bsz, 8))
+    bp, dp, np_ = _ceil_to(bsz, bb), _ceil_to(d, 128), _ceil_to(dfeat, 128)
+
+    mu_col = jnp.broadcast_to(jnp.asarray(mu, theta.dtype), (bsz,))
+    theta_p = _pad2(theta, bp, np_)
+    x_p = _pad2(x, bp, dp)
+    y_p = jnp.pad(y, (0, bp - bsz))[:, None]  # (Bp, 1)
+    mu_p = jnp.pad(mu_col, (0, bp - bsz))[:, None]
+    w_p = _pad2(w, dp, np_)
+    b_p = jnp.pad(b, (0, np_ - dfeat))[None, :]  # (1, Np)
+
+    grid = (bp // bb,)
+    theta_new, pred, err = pl.pallas_call(
+        functools.partial(rff_klms_step_kernel, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, dp), lambda i: (i, 0)),
+            pl.BlockSpec((dp, np_), lambda i: (0, 0)),  # grid-invariant W
+            pl.BlockSpec((1, np_), lambda i: (0, 0)),
+            pl.BlockSpec((bb, np_), lambda i: (i, 0)),
+            pl.BlockSpec((bb, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bb, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, np_), lambda i: (i, 0)),
+            pl.BlockSpec((bb, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bb, 1), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp, np_), theta.dtype),
+            jax.ShapeDtypeStruct((bp, 1), theta.dtype),
+            jax.ShapeDtypeStruct((bp, 1), theta.dtype),
+        ],
+        interpret=interpret,
+    )(x_p, w_p, b_p, theta_p, y_p, mu_p)
+    return theta_new[:bsz, :dfeat], pred[:bsz, 0], err[:bsz, 0]

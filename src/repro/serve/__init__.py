@@ -1,3 +1,14 @@
 from repro.serve.serve_loop import generate, prefill_tokens
+from repro.serve.bank_loop import (
+    make_bank_server,
+    reset_tenants,
+    serve_bank_stream,
+)
 
-__all__ = ["generate", "prefill_tokens"]
+__all__ = [
+    "generate",
+    "prefill_tokens",
+    "make_bank_server",
+    "serve_bank_stream",
+    "reset_tenants",
+]

@@ -1,0 +1,65 @@
+"""Serving loop for the online filter bank (multi-tenant kernel regression).
+
+The LM loop in serve_loop.py drives a decode state; this drives the other
+fixed-size state in the repo — a bank of B online kernel filters, one per
+tenant stream. Each tick every tenant delivers one ``(x, y)`` observation;
+the server answers with the prior prediction (made *before* seeing ``y`` —
+the honest online quantity) and folds the observation into its state via the
+fused Pallas KLMS step. Fixed-size state means admission is O(1): a tenant
+slot is a ``(D,)`` row, reset by zeroing it.
+
+``make_bank_server`` returns the one-tick function (jit-compiled once,
+reused every tick); ``serve_bank_stream`` scans a whole ``(B, n)`` traffic
+matrix through it under a single jit — the benchmark's "≥64 concurrent
+streams, one jitted call" path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bank import klms_bank_init, klms_bank_run, klms_bank_step
+from repro.core.klms import LMSState, StepOut
+from repro.core.rff import RFF
+
+__all__ = ["make_bank_server", "serve_bank_stream", "reset_tenants"]
+
+
+def make_bank_server(
+    rff: RFF, mu: Union[float, jax.Array], mode: str = "auto"
+) -> Callable[[LMSState, jax.Array, jax.Array], tuple[LMSState, StepOut]]:
+    """Build the jitted per-tick server: ``(state, xs (B,d), ys (B,)) ->
+    (state, StepOut)``. Compile once, call per tick."""
+
+    @jax.jit
+    def tick(state: LMSState, xs: jax.Array, ys: jax.Array):
+        return klms_bank_step(state, xs, ys, rff, mu, mode=mode)
+
+    return tick
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def serve_bank_stream(
+    rff: RFF,
+    xs: jax.Array,
+    ys: jax.Array,
+    mu: Union[float, jax.Array],
+    state: Optional[LMSState] = None,
+    mode: str = "auto",
+) -> tuple[LMSState, StepOut]:
+    """Serve B tenant streams ``xs (B, n, d)``, ``ys (B, n)`` in one jit."""
+    return klms_bank_run(rff, xs, ys, mu, state=state, mode=mode)
+
+
+def reset_tenants(state: LMSState, slots: jax.Array) -> LMSState:
+    """Zero the given tenant rows (churn: admit a new tenant into a slot).
+
+    ``slots`` is an int array of bank indices; O(1) per tenant because the
+    per-tenant state is a fixed-size row, never a grown dictionary.
+    """
+    theta = state.theta.at[slots].set(0.0)
+    step = state.step.at[slots].set(0)
+    return LMSState(theta=theta, step=step)

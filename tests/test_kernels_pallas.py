@@ -28,6 +28,65 @@ def test_rff_features_kernel_sweep(key, m, d, D, dtype):
     )
 
 
+@pytest.mark.parametrize(
+    "bank,d,D", [(64, 8, 512), (7, 5, 300), (1, 1, 17), (33, 128, 129)]
+)
+@pytest.mark.parametrize("per_stream_mu", [False, True])
+def test_rff_klms_step_kernel_sweep(key, bank, d, D, per_stream_mu):
+    """Fused featurize+predict+update step vs the two-pass oracle."""
+    from repro.kernels.rff_klms_step import rff_klms_bank_step_pallas
+
+    ks = jax.random.split(key, 6)
+    theta = jax.random.normal(ks[0], (bank, D))
+    x = jax.random.normal(ks[1], (bank, d))
+    y = jax.random.normal(ks[2], (bank,))
+    w = jax.random.normal(ks[3], (d, D))
+    b = jax.random.uniform(ks[4], (D,), maxval=2 * np.pi)
+    mu = (
+        jax.random.uniform(ks[5], (bank,), minval=0.05, maxval=1.5)
+        if per_stream_mu
+        else jnp.asarray(0.5)
+    )
+    got = rff_klms_bank_step_pallas(theta, x, y, w, b, mu, interpret=True)
+    want = ref.rff_klms_bank_step_ref(theta, x, y, w, b, mu)
+    for g, w_ in zip(got, want):
+        np.testing.assert_allclose(
+            np.asarray(g), np.asarray(w_), atol=1e-5, rtol=1e-5
+        )
+
+
+@pytest.mark.parametrize("block_b", [1, 8, 32])
+def test_rff_klms_step_block_shape_invariance(key, block_b):
+    from repro.kernels.rff_klms_step import rff_klms_bank_step_pallas
+
+    ks = jax.random.split(key, 5)
+    theta = jax.random.normal(ks[0], (20, 200))
+    x = jax.random.normal(ks[1], (20, 6))
+    y = jax.random.normal(ks[2], (20,))
+    w = jax.random.normal(ks[3], (6, 200))
+    b = jax.random.uniform(ks[4], (200,), maxval=2 * np.pi)
+    got = rff_klms_bank_step_pallas(
+        theta, x, y, w, b, jnp.asarray(0.7), block_b=block_b, interpret=True
+    )
+    want = ref.rff_klms_bank_step_ref(theta, x, y, w, b, 0.7)
+    for g, w_ in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w_), atol=1e-5)
+
+
+def test_rff_klms_step_ops_dispatch(key):
+    """mode='interpret' (Pallas) and mode='xla' agree through ops."""
+    ks = jax.random.split(key, 5)
+    theta = jax.random.normal(ks[0], (16, 128))
+    x = jax.random.normal(ks[1], (16, 4))
+    y = jax.random.normal(ks[2], (16,))
+    w = jax.random.normal(ks[3], (4, 128))
+    b = jax.random.uniform(ks[4], (128,), maxval=2 * np.pi)
+    got = ops.rff_klms_bank_step(theta, x, y, w, b, 0.5, mode="interpret")
+    want = ops.rff_klms_bank_step(theta, x, y, w, b, 0.5, mode="xla")
+    for g, w_ in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w_), atol=1e-5)
+
+
 @pytest.mark.parametrize("block", [(64, 64, 64), (128, 128, 128), (32, 256, 128)])
 def test_rff_features_block_shape_invariance(key, block):
     bm, bn, bk = block

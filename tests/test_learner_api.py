@@ -1,0 +1,199 @@
+"""Unified OnlineLearner adapters + filter bank vs the legacy drivers."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    ald_krls_learner,
+    ald_krls_run,
+    bank_init,
+    bank_predict,
+    bank_run,
+    klms_bank_run,
+    klms_learner,
+    krls_learner,
+    nklms_learner,
+    qklms_learner,
+    qklms_run,
+    rff_klms_run,
+    rff_krls_run,
+    sample_rff,
+)
+from repro.data.synthetic import gen_nonlinear_wiener
+from repro.serve import make_bank_server, reset_tenants, serve_bank_stream
+
+
+@pytest.fixture(scope="module")
+def stream():
+    return gen_nonlinear_wiener(jax.random.PRNGKey(5), num_samples=400)
+
+
+@pytest.fixture(scope="module")
+def rff():
+    return sample_rff(jax.random.PRNGKey(0), 5, 100, sigma=5.0)
+
+
+def _assert_same_run(out_a, out_b):
+    np.testing.assert_array_equal(
+        np.asarray(out_a.error), np.asarray(out_b.error)
+    )
+    np.testing.assert_array_equal(
+        np.asarray(out_a.prediction), np.asarray(out_b.prediction)
+    )
+
+
+def test_klms_adapter_matches_legacy(rff, stream):
+    xs, ys = stream
+    _, out = klms_learner(rff, 0.5).run(None, xs, ys)
+    _, want = rff_klms_run(rff, xs, ys, mu=0.5)
+    _assert_same_run(out, want)
+
+
+def test_nklms_adapter_matches_legacy(rff, stream):
+    xs, ys = stream
+    _, out = nklms_learner(rff, 0.5).run(None, xs, ys)
+    _, want = rff_klms_run(rff, xs, ys, mu=0.5, normalized=True)
+    _assert_same_run(out, want)
+
+
+def test_krls_adapter_matches_legacy(rff, stream):
+    xs, ys = stream
+    _, out = krls_learner(rff, lam=1e-4, beta=0.9995).run(None, xs, ys)
+    _, want = rff_krls_run(rff, xs, ys, lam=1e-4, beta=0.9995)
+    _assert_same_run(out, want)
+
+
+def test_qklms_adapter_matches_legacy(stream):
+    xs, ys = stream
+    learner = qklms_learner(5, sigma=5.0, mu=1.0, eps=5.0, capacity=128)
+    _, out = learner.run(None, xs, ys)
+    _, want = qklms_run(xs, ys, sigma=5.0, mu=1.0, eps=5.0, capacity=128)
+    _assert_same_run(out, want)
+
+
+def test_ald_krls_adapter_matches_legacy(stream):
+    xs, ys = stream
+    learner = ald_krls_learner(5, sigma=5.0, nu=5e-3, capacity=64)
+    _, out = learner.run(None, xs, ys)
+    _, want = ald_krls_run(xs, ys, sigma=5.0, nu=5e-3, capacity=64)
+    _assert_same_run(out, want)
+
+
+@pytest.mark.parametrize(
+    "make",
+    [
+        lambda rff: klms_learner(rff, 0.5),
+        lambda rff: krls_learner(rff),
+        lambda rff: qklms_learner(5, 5.0, 1.0, 5.0, capacity=64),
+        lambda rff: ald_krls_learner(5, 5.0, nu=5e-3, capacity=64),
+    ],
+    ids=["klms", "krls", "qklms", "ald_krls"],
+)
+def test_predict_matches_step_prediction(make, rff, stream):
+    """predict(state, x) == the prediction step() would make on x."""
+    xs, ys = stream
+    learner = make(rff)
+    state, _ = learner.run(None, xs[:100], ys[:100])
+    _, out = learner.step(state, xs[100], ys[100])
+    pred = learner.predict(state, xs[100])
+    np.testing.assert_allclose(
+        np.asarray(pred), np.asarray(out.prediction), atol=1e-6
+    )
+
+
+@pytest.mark.parametrize(
+    "make,atol",
+    [
+        (lambda rff: klms_learner(rff, 0.5), 1e-6),
+        # KRLS propagates a (D, D) P matrix: batched-matmul accumulation
+        # order differs from the sequential matvec, so allow f32 drift.
+        (lambda rff: krls_learner(rff), 1e-3),
+        (lambda rff: qklms_learner(5, 5.0, 1.0, 5.0, capacity=64), 1e-6),
+    ],
+    ids=["klms", "krls", "qklms"],
+)
+def test_bank_matches_sequential_runs(make, atol, rff, stream):
+    """vmapped bank over B streams == B independent sequential runs."""
+    xs, ys = stream
+    bank, n = 5, 80
+    xb = xs[: bank * n].reshape(bank, n, -1)
+    yb = ys[: bank * n].reshape(bank, n)
+    learner = make(rff)
+    states = bank_init(learner, bank)
+    final, outs = jax.jit(lambda s: bank_run(learner, s, xb, yb))(states)
+    for i in range(bank):
+        _, want = learner.run(None, xb[i], yb[i])
+        np.testing.assert_allclose(
+            np.asarray(outs.error[i]), np.asarray(want.error), atol=atol
+        )
+    preds = bank_predict(learner, final, xb[:, -1])
+    assert preds.shape == (bank,)
+
+
+def test_fused_klms_bank_matches_sequential(rff, stream):
+    """Fused-step bank (shared feature map) == sequential rff_klms_run."""
+    xs, ys = stream
+    bank, n = 4, 100
+    xb = xs[: bank * n].reshape(bank, n, -1)
+    yb = ys[: bank * n].reshape(bank, n)
+    _, outs = jax.jit(lambda: klms_bank_run(rff, xb, yb, 0.5, mode="xla"))()
+    for i in range(bank):
+        _, want = rff_klms_run(rff, xb[i], yb[i], mu=0.5)
+        np.testing.assert_allclose(
+            np.asarray(outs.error[i]), np.asarray(want.error), atol=1e-5
+        )
+
+
+def test_fused_klms_bank_per_stream_mu(rff, stream):
+    """(B,) mu vector == per-stream sequential runs with scalar mus."""
+    xs, ys = stream
+    bank, n = 3, 100
+    xb = jnp.broadcast_to(xs[:n], (bank, n, xs.shape[-1]))
+    yb = jnp.broadcast_to(ys[:n], (bank, n))
+    mus = jnp.array([0.1, 0.5, 1.0])
+    _, outs = klms_bank_run(rff, xb, yb, mus, mode="xla")
+    for i in range(bank):
+        _, want = rff_klms_run(rff, xs[:n], ys[:n], mu=float(mus[i]))
+        np.testing.assert_allclose(
+            np.asarray(outs.error[i]), np.asarray(want.error), atol=1e-5
+        )
+
+
+def test_bank_serves_64_streams_one_jit(rff):
+    """Acceptance: >=64 concurrent streams through a single jitted call."""
+    bank, n = 64, 50
+    xs_all, ys_all = gen_nonlinear_wiener(
+        jax.random.PRNGKey(9), num_samples=bank * n
+    )
+    xb = xs_all.reshape(bank, n, -1)
+    yb = ys_all.reshape(bank, n)
+    served = jax.jit(
+        lambda: serve_bank_stream(rff, xb, yb, mu=0.5, mode="xla")
+    )
+    final, outs = served()
+    assert outs.error.shape == (bank, n)
+    assert final.theta.shape == (bank, rff.num_features)
+    assert bool(jnp.all(final.step == n))
+    # learning happened on every stream
+    assert float(jnp.mean(outs.error[:, -10:] ** 2)) < float(
+        jnp.mean(outs.error[:, :10] ** 2)
+    )
+
+
+def test_bank_server_tick_and_tenant_reset(rff, stream):
+    xs, ys = stream
+    bank = 8
+    xb = xs[:bank]
+    yb = ys[:bank]
+    tick = make_bank_server(rff, mu=0.5, mode="xla")
+    state, _ = serve_bank_stream(
+        rff, jnp.broadcast_to(xb[:, None], (bank, 1, 5)), yb[:, None],
+        mu=0.5, mode="xla",
+    )
+    state, out = tick(state, xb, yb)
+    assert out.prediction.shape == (bank,)
+    state = reset_tenants(state, jnp.array([2, 5]))
+    assert float(jnp.max(jnp.abs(state.theta[2]))) == 0.0
+    assert int(state.step[5]) == 0
+    assert float(jnp.max(jnp.abs(state.theta[0]))) > 0.0

@@ -2,6 +2,9 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis", reason="optional dep: property tests")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.rff import gaussian_kernel, kernel_estimate, rff_features, sample_rff
