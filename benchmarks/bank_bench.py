@@ -15,8 +15,16 @@ Two comparisons:
   CPU figure as a baseline to beat when real-TPU numbers land (ROADMAP).
 * ``bench_bank_streams`` — B >= 64 concurrent streams of length n served by
   ONE jitted call (the acceptance-criteria path). derived = stream-steps/s.
+
+Run as a script to emit the CI bench-smoke artifact ``BENCH_bank.json``:
+
+    python -m benchmarks.bank_bench --tiny --out BENCH_bank.json
 """
 from __future__ import annotations
+
+import argparse
+import json
+import sys
 
 import jax
 import jax.numpy as jnp
@@ -26,7 +34,7 @@ from repro.core.bank import klms_bank_init, klms_bank_run
 from repro.core.rff import sample_rff
 from repro.kernels import ops, ref
 
-__all__ = ["bench_bank_fused_vs_twopass", "bench_bank_streams"]
+__all__ = ["bench_bank_fused_vs_twopass", "bench_bank_streams", "main"]
 
 
 def bench_bank_fused_vs_twopass(
@@ -93,3 +101,49 @@ def bench_bank_streams(
         "bank": bank,
         "steps": n,
     }
+
+
+def main(argv=None) -> None:
+    """Emit the KLMS bank benchmarks as a ``BENCH_bank.json`` artifact."""
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true", help="CI smoke shapes")
+    ap.add_argument("--out", default="BENCH_bank.json")
+    args = ap.parse_args(argv)
+
+    if args.tiny:
+        fused_kw = dict(bank=8, d=4, dfeat=64)
+        stream_kw = dict(bank=8, n=32, d=4, dfeat=64)
+    else:
+        fused_kw = dict(bank=64, d=8, dfeat=512)
+        stream_kw = dict(bank=64, n=256, d=8, dfeat=256)
+
+    records = []
+    us, derived, detail = bench_bank_fused_vs_twopass(**fused_kw)
+    records.append({
+        "bench": "bank_fused_vs_twopass",
+        "us_per_call": us,
+        "fused_speedup": derived,
+        **detail,
+    })
+    us, derived, detail = bench_bank_streams(**stream_kw)
+    records.append({
+        "bench": "bank_streams",
+        "us_per_step": us,
+        "stream_steps_per_s": derived,
+        **detail,
+    })
+
+    payload = {
+        "suite": "bank_bench",
+        "backend": jax.default_backend(),
+        "tiny": args.tiny,
+        "records": records,
+    }
+    with open(args.out, "w") as f:
+        json.dump(payload, f, indent=2)
+    json.dump(payload, sys.stdout, indent=2)
+    print()
+
+
+if __name__ == "__main__":
+    main()

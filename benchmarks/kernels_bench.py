@@ -6,7 +6,6 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core.rff import RFF
 from repro.kernels import ops
 
 __all__ = ["bench_rff_features", "bench_rff_attention"]

@@ -10,7 +10,14 @@ import argparse
 import json
 import sys
 
-from benchmarks import bank_bench, kernels_bench, paper, roofline_report
+from benchmarks import bank_bench, kernels_bench, krls_shard_bench, paper, roofline_report
+
+
+def _krls_bank_fused_vs_twopass():
+    """Adapt krls_shard_bench's record format to the (us, derived, detail)
+    CSV contract. derived = fused speedup (x)."""
+    rec = krls_shard_bench.bench_krls_bank_fused_vs_twopass()[0]
+    return rec["fused_us"], rec["fused_speedup"], rec
 
 
 def main() -> None:
@@ -33,6 +40,7 @@ def main() -> None:
         "kernel_rff_attention": kernels_bench.bench_rff_attention,
         "bank_fused_vs_twopass": bank_bench.bench_bank_fused_vs_twopass,
         "bank_streams": bank_bench.bench_bank_streams,
+        "krls_bank_fused_vs_twopass": _krls_bank_fused_vs_twopass,
         "roofline": roofline_report.roofline_table,
     }
     print("name,us_per_call,derived")

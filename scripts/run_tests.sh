@@ -1,17 +1,39 @@
 #!/usr/bin/env bash
-# Tier-1 test runner. Usage:
+# Tier-1 test runner (CI-friendly). Usage:
 #   scripts/run_tests.sh           # full suite (the tier-1 verify command)
 #   scripts/run_tests.sh --fast    # skip @pytest.mark.slow tests (CI hot loop)
+#   scripts/run_tests.sh --cov     # emit coverage.xml (requires pytest-cov)
 # Extra args are forwarded to pytest, e.g. scripts/run_tests.sh --fast -k bank
-set -euo pipefail
+# The script's exit code is pytest's exit code.
+set -uo pipefail
 
 REPO="$(cd "$(dirname "${BASH_SOURCE[0]}")/.." && pwd)"
 export PYTHONPATH="${REPO}/src${PYTHONPATH:+:$PYTHONPATH}"
+# Pin the platform so collection never trips on accelerator probing: CI
+# runners (and most dev boxes) are CPU-only, and an unset JAX_PLATFORMS can
+# abort at first jax import while it looks for TPU/GPU plugins. Override by
+# exporting JAX_PLATFORMS yourself.
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 
 ARGS=(-x -q)
-if [[ "${1:-}" == "--fast" ]]; then
+while [[ $# -gt 0 ]]; do
+  case "$1" in
+    --fast)
+      ARGS+=(-m "not slow")
+      ;;
+    --cov)
+      if ! python -c "import pytest_cov" >/dev/null 2>&1; then
+        echo "error: --cov requires pytest-cov (pip install pytest-cov)" >&2
+        exit 2
+      fi
+      ARGS+=(--cov=repro --cov-report=xml --cov-report=term)
+      ;;
+    *)
+      ARGS+=("$1")
+      ;;
+  esac
   shift
-  ARGS+=(-m "not slow")
-fi
+done
 
-exec python -m pytest "${ARGS[@]}" "$@"
+python -m pytest "${ARGS[@]}"
+exit $?

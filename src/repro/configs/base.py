@@ -6,8 +6,7 @@ a ``ModelConfig``; the unified ``TransformerLM`` assembles blocks from it.
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Optional
 
 import jax.numpy as jnp

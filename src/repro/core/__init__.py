@@ -23,7 +23,20 @@ from repro.core.klms import (
     rff_klms_run,
     rff_klms_batch_step,
 )
-from repro.core.krls import RLSState, rff_krls_init, rff_krls_step, rff_krls_run
+from repro.core.krls import (
+    KRLS_SHARD_AXIS,
+    RLSState,
+    krls_feature_specs,
+    krls_state_specs,
+    make_sharded_krls_predict,
+    make_sharded_krls_step,
+    rff_krls_init,
+    rff_krls_run,
+    rff_krls_step,
+    shard_krls_rff,
+    sharded_krls_init,
+    sharded_krls_run,
+)
 from repro.core.qklms import QKLMSState, qklms_init, qklms_step, qklms_run
 from repro.core.krls_ald import (
     ALDKRLSState,
@@ -36,6 +49,7 @@ from repro.core.learner import (
     klms_learner,
     nklms_learner,
     krls_learner,
+    sharded_krls_learner,
     qklms_learner,
     ald_krls_learner,
 )
@@ -47,6 +61,9 @@ from repro.core.bank import (
     klms_bank_init,
     klms_bank_step,
     klms_bank_run,
+    krls_bank_init,
+    krls_bank_step,
+    krls_bank_run,
 )
 from repro.core import theory, adaptive, distributed
 
@@ -64,6 +81,9 @@ __all__ = [
     "klms_bank_init",
     "klms_bank_step",
     "klms_bank_run",
+    "krls_bank_init",
+    "krls_bank_step",
+    "krls_bank_run",
     "RFF",
     "sample_rff",
     "rff_features",
@@ -81,6 +101,15 @@ __all__ = [
     "rff_krls_init",
     "rff_krls_step",
     "rff_krls_run",
+    "KRLS_SHARD_AXIS",
+    "krls_state_specs",
+    "krls_feature_specs",
+    "shard_krls_rff",
+    "sharded_krls_init",
+    "sharded_krls_run",
+    "make_sharded_krls_step",
+    "make_sharded_krls_predict",
+    "sharded_krls_learner",
     "QKLMSState",
     "qklms_init",
     "qklms_step",

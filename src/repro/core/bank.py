@@ -15,6 +15,10 @@ Two tiers:
   feature map and steps through ``kernels.rff_klms_bank_step`` (the Pallas
   kernel that keeps the feature block in VMEM), with per-filter ``mu``
   supported for step-size sweeps.
+* Fused KRLS fast path: :func:`krls_bank_run` — B tenants of EW-RLS (each a
+  ``(D,)`` theta + ``(D, D)`` P) ticked in one pass through
+  ``kernels.rff_krls_bank_step``, with per-tenant ``beta`` supported for
+  forgetting-factor sweeps.
 
 Time is the scan axis and the bank is the batch axis, so the per-tick
 program is exactly the serving hot loop (serve/bank_loop.py wraps it).
@@ -27,6 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.klms import LMSState, StepOut, rff_klms_init
+from repro.core.krls import RLSState, rff_krls_init
 from repro.core.learner import OnlineLearner
 from repro.core.rff import RFF
 from repro.kernels import ops
@@ -39,6 +44,9 @@ __all__ = [
     "klms_bank_init",
     "klms_bank_step",
     "klms_bank_run",
+    "krls_bank_init",
+    "krls_bank_step",
+    "krls_bank_run",
 ]
 
 
@@ -132,6 +140,74 @@ def klms_bank_run(
     def body(s, xy):
         x_t, y_t = xy
         return klms_bank_step(s, x_t, y_t, rff, mu, mode=mode)
+
+    xs_t = jnp.swapaxes(xs, 0, 1)
+    ys_t = jnp.swapaxes(ys, 0, 1)
+    state, outs = jax.lax.scan(body, state, (xs_t, ys_t))
+    return state, jax.tree.map(lambda a: jnp.swapaxes(a, 0, 1), outs)
+
+
+# ---------------------------------------------------------------------------
+# Fused KRLS bank — shared feature map, per-tenant (D, D) inverse
+# correlation, Pallas hot path.
+# ---------------------------------------------------------------------------
+
+
+def krls_bank_init(
+    rff: RFF,
+    size: int,
+    lam: float = 1e-4,
+    dtype: Optional[jnp.dtype] = None,
+) -> RLSState:
+    """Batched ``RLSState``: theta ``(B, D)``, pmat ``(B, D, D)``."""
+    single = rff_krls_init(
+        rff.num_features, lam, dtype or rff.omega.dtype
+    )
+    return jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (size,) + a.shape), single
+    )
+
+
+def krls_bank_step(
+    state: RLSState,
+    xs: jax.Array,
+    ys: jax.Array,
+    rff: RFF,
+    beta: Union[float, jax.Array] = 0.9995,
+    mode: str = "auto",
+) -> tuple[RLSState, StepOut]:
+    """One fused RLS tick for the whole bank: ``xs (B, d)``, ``ys (B,)``."""
+    theta, pmat, pred, err = ops.rff_krls_bank_step(
+        state.theta, state.pmat, xs, ys, rff.omega, rff.bias, beta, mode=mode
+    )
+    return (
+        RLSState(theta=theta, pmat=pmat, step=state.step + 1),
+        StepOut(prediction=pred, error=err),
+    )
+
+
+def krls_bank_run(
+    rff: RFF,
+    xs: jax.Array,
+    ys: jax.Array,
+    lam: float = 1e-4,
+    beta: Union[float, jax.Array] = 0.9995,
+    state: Optional[RLSState] = None,
+    mode: str = "auto",
+) -> tuple[RLSState, StepOut]:
+    """Serve B KRLS streams ``xs (B, n, d)``, ``ys (B, n)`` in one jit.
+
+    ``beta`` may be a scalar or ``(B,)`` (forgetting-factor sweep: one
+    stream per candidate beta — the ROADMAP's per-tenant-hyperparams item
+    for the KRLS family). Matches B sequential ``rff_krls_run`` calls to
+    f32 accumulation-order tolerance (tested).
+    """
+    if state is None:
+        state = krls_bank_init(rff, xs.shape[0], lam)
+
+    def body(s, xy):
+        x_t, y_t = xy
+        return krls_bank_step(s, x_t, y_t, rff, beta, mode=mode)
 
     xs_t = jnp.swapaxes(xs, 0, 1)
     ys_t = jnp.swapaxes(ys, 0, 1)

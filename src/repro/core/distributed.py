@@ -27,6 +27,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.klms import LMSState, rff_klms_init, rff_klms_step
+from repro.core.rff import RFF
+
 # ``shard_map`` moved from jax.experimental to the jax namespace (and the
 # experimental module was later removed); support both spellings.
 if hasattr(jax, "shard_map"):
@@ -51,8 +54,6 @@ def _mark_varying(tree, axis: str):
         return jax.tree.map(lambda a: pvary(a, axis), tree)
     return tree
 
-from repro.core.klms import LMSState, StepOut, rff_klms_init, rff_klms_step
-from repro.core.rff import RFF
 
 __all__ = [
     "DiffusionState",

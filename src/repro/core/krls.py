@@ -16,18 +16,41 @@ Standard EW-RLS recursions (forgetting factor beta, regularizer lam):
     P     <- (P - g z^T P) / beta
 
 Per-step cost O(D^2) — fixed, vs O(M_n^2) growing for Engel's KRLS.
+
+Sharded variant (this module's second half): the dense ``(D, D)`` matrix
+``P`` is the only state that outgrows a single chip. Because the RFF
+formulation keeps every quantity a fixed Euclidean object (Bouboulis et al.
+2017 use exactly this to distribute KLMS over networks), ``P`` partitions
+cleanly into row blocks ``(D/n, D)`` over a mesh axis, and the rank-1 RLS
+update needs ONE ``psum`` per tick — see :func:`sharded_krls_run`.
 """
 from __future__ import annotations
 
+import functools
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.distributed import _mark_varying, _shard_map
 from repro.core.klms import StepOut
 from repro.core.rff import RFF, rff_features
 
-__all__ = ["RLSState", "rff_krls_init", "rff_krls_step", "rff_krls_run"]
+__all__ = [
+    "RLSState",
+    "rff_krls_init",
+    "rff_krls_step",
+    "rff_krls_run",
+    "KRLS_SHARD_AXIS",
+    "krls_state_specs",
+    "krls_feature_specs",
+    "shard_krls_rff",
+    "sharded_krls_init",
+    "make_sharded_krls_step",
+    "make_sharded_krls_predict",
+    "sharded_krls_run",
+]
 
 
 class RLSState(NamedTuple):
@@ -94,3 +117,237 @@ def rff_krls_run(
         return rff_krls_step(s, xy, rff, beta)
 
     return jax.lax.scan(body, state, (xs, ys))
+
+
+# ---------------------------------------------------------------------------
+# Sharded RFF-KRLS — partition P (and the feature bank) over a mesh axis.
+#
+# Layout (mesh axis ``shard``, n = axis size, Dn = D / n):
+#   omega (d, D)  -> column blocks (d, Dn)   each shard owns features rows_i
+#   bias  (D,)    -> blocks (Dn,)
+#   theta (D,)    -> row blocks (Dn,)
+#   P     (D, D)  -> row blocks (Dn, D)      per-shard bytes: 4*D*Dn
+#
+# Per tick, each shard featurizes only its slice ``z_i`` and computes
+#   pz_partial = z_i @ P[rows_i, :]          (valid because P is symmetric:
+#                                             Pz = P^T z = sum_i P_i^T z_i)
+#   yhat_partial = theta_i @ z_i
+# One psum of the packed ``(2D + 1,)`` vector [pz_partial, scatter(z_i),
+# yhat_partial] then gives every shard the full ``Pz``, the full ``z`` and
+# the prediction; the gain, theta update and the (Dn, D) outer-product
+# downdate are pure local work. The downdate is applied in the exactly
+# symmetric form ``(pz_i pz_j) * (1/denom)`` (commutative products round
+# identically on both sides of the diagonal), so P stays bitwise symmetric
+# without the dense path's explicit re-symmetrization pass — which is what
+# licenses the ``z_i @ P_i`` transpose trick above.
+# ---------------------------------------------------------------------------
+
+KRLS_SHARD_AXIS = "shard"
+
+
+def krls_state_specs(axis: str = KRLS_SHARD_AXIS) -> RLSState:
+    """PartitionSpecs for RLSState: theta/P row-sharded, step replicated."""
+    return RLSState(theta=P(axis), pmat=P(axis, None), step=P())
+
+
+def krls_feature_specs(axis: str = KRLS_SHARD_AXIS) -> RFF:
+    """PartitionSpecs for the feature bank: omega/bias column-sharded."""
+    return RFF(omega=P(None, axis), bias=P(axis))
+
+
+def shard_krls_rff(mesh: Mesh, rff: RFF, axis: str = KRLS_SHARD_AXIS) -> RFF:
+    """Place the feature bank with its columns partitioned over ``axis``."""
+    return jax.tree.map(
+        lambda a, s: jax.device_put(a, NamedSharding(mesh, s)),
+        rff,
+        krls_feature_specs(axis),
+    )
+
+
+def sharded_krls_init(
+    mesh: Mesh,
+    num_features: int,
+    lam: float = 1e-4,
+    dtype: jnp.dtype = jnp.float32,
+    axis: str = KRLS_SHARD_AXIS,
+) -> RLSState:
+    """``rff_krls_init`` placed row-sharded over ``axis`` (D must divide)."""
+    n = mesh.shape[axis]
+    if num_features % n:
+        raise ValueError(
+            f"num_features={num_features} must divide the {axis!r} axis ({n})"
+        )
+    state = rff_krls_init(num_features, lam, dtype)
+    return jax.tree.map(
+        lambda a, s: jax.device_put(a, NamedSharding(mesh, s)),
+        state,
+        krls_state_specs(axis),
+    )
+
+
+def _sharded_rls_tick(
+    theta_l: jax.Array,  # (Dn,) local row block
+    pmat_l: jax.Array,  # (Dn, D) local row block
+    omega_l: jax.Array,  # (d, Dn) local feature columns
+    bias_l: jax.Array,  # (Dn,)
+    x: jax.Array,  # (d,) replicated
+    y: jax.Array,  # () replicated
+    beta: float,
+    axis: str,
+    num_features: int,
+) -> tuple[jax.Array, jax.Array, StepOut]:
+    """One sharded EW-RLS update; exactly one psum over ``axis``."""
+    dfull = num_features
+    dloc = theta_l.shape[0]
+    offset = jax.lax.axis_index(axis) * dloc
+
+    scale = jnp.sqrt(2.0 / dfull).astype(omega_l.dtype)
+    z_l = scale * jnp.cos(x @ omega_l + bias_l)  # (Dn,) local feature slice
+
+    pz_part = z_l @ pmat_l  # (D,) — P^T z contribution of our rows (P sym)
+    yhat_part = z_l @ theta_l  # () partial prediction
+    z_scat = jax.lax.dynamic_update_slice(
+        jnp.zeros((dfull,), z_l.dtype), z_l, (offset,)
+    )
+    packed = jnp.concatenate([pz_part, z_scat, yhat_part[None]])
+    packed = jax.lax.psum(packed, axis)  # the tick's one collective
+
+    pz = packed[:dfull]
+    z = packed[dfull : 2 * dfull]
+    y_hat = packed[2 * dfull]
+    err = y - y_hat
+    inv_denom = 1.0 / (beta + z @ pz)
+
+    pz_l = jax.lax.dynamic_slice(pz, (offset,), (dloc,))
+    theta_l = theta_l + (err * inv_denom) * pz_l
+    pmat_l = (pmat_l - jnp.outer(pz_l, pz) * inv_denom) / beta
+    return theta_l, pmat_l, StepOut(prediction=y_hat, error=err)
+
+
+def make_sharded_krls_step(
+    mesh: Mesh,
+    rff: RFF,
+    beta: float = 0.9995,
+    axis: str = KRLS_SHARD_AXIS,
+):
+    """Jitted one-tick function ``(state, x, y) -> (state, StepOut)``.
+
+    ``rff`` may be given unsharded; it is placed via :func:`shard_krls_rff`
+    and closed over. State arrays must carry the :func:`krls_state_specs`
+    layout (use :func:`sharded_krls_init`).
+    """
+    rff = shard_krls_rff(mesh, rff, axis)
+    dfull = rff.num_features
+    sspec = krls_state_specs(axis)
+
+    def body(omega_l, bias_l, theta_l, pmat_l, step, x, y):
+        theta_l, pmat_l, out = _sharded_rls_tick(
+            theta_l, pmat_l, omega_l, bias_l, x, y, beta, axis, dfull
+        )
+        return theta_l, pmat_l, step + 1, out
+
+    shmapped = _shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            P(None, axis), P(axis), sspec.theta, sspec.pmat, sspec.step,
+            P(), P(),
+        ),
+        out_specs=(sspec.theta, sspec.pmat, sspec.step, P()),
+    )
+
+    @jax.jit
+    def step_fn(state: RLSState, x: jax.Array, y: jax.Array):
+        theta, pmat, step, out = shmapped(
+            rff.omega, rff.bias, state.theta, state.pmat, state.step, x, y
+        )
+        return RLSState(theta=theta, pmat=pmat, step=step), out
+
+    return step_fn
+
+
+def make_sharded_krls_predict(
+    mesh: Mesh, rff: RFF, axis: str = KRLS_SHARD_AXIS
+):
+    """Jitted ``(state, x) -> y_hat`` on the sharded layout (one psum)."""
+    rff = shard_krls_rff(mesh, rff, axis)
+    dfull = rff.num_features
+    scale = float((2.0 / dfull) ** 0.5)
+
+    def body(omega_l, bias_l, theta_l, x):
+        z_l = scale * jnp.cos(x @ omega_l + bias_l)
+        return jax.lax.psum(z_l @ theta_l, axis)
+
+    shmapped = _shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(P(None, axis), P(axis), P(axis), P()),
+        out_specs=P(),
+    )
+
+    @jax.jit
+    def predict_fn(state: RLSState, x: jax.Array) -> jax.Array:
+        return shmapped(rff.omega, rff.bias, state.theta, x)
+
+    return predict_fn
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_krls_run_program(mesh: Mesh, axis: str, beta: float, dfull: int):
+    """Build (and cache) the jitted whole-stream program for one
+    (mesh, axis, beta, D) — repeat drivers re-use the compiled scan."""
+    sspec = krls_state_specs(axis)
+
+    def node(omega_l, bias_l, theta_l, pmat_l, step, xs, ys):
+        carry0 = _mark_varying((theta_l, pmat_l), axis)
+
+        def body(carry, xy):
+            th, pm = carry
+            x, y = xy
+            th, pm, out = _sharded_rls_tick(
+                th, pm, omega_l, bias_l, x, y, beta, axis, dfull
+            )
+            return (th, pm), out
+
+        (theta_l, pmat_l), outs = jax.lax.scan(body, carry0, (xs, ys))
+        return theta_l, pmat_l, step + xs.shape[0], outs
+
+    shmapped = _shard_map(
+        node,
+        mesh=mesh,
+        in_specs=(
+            P(None, axis), P(axis), sspec.theta, sspec.pmat, sspec.step,
+            P(), P(),
+        ),
+        out_specs=(sspec.theta, sspec.pmat, sspec.step, P()),
+    )
+    return jax.jit(shmapped)
+
+
+def sharded_krls_run(
+    mesh: Mesh,
+    rff: RFF,
+    xs: jax.Array,
+    ys: jax.Array,
+    lam: float = 1e-4,
+    beta: float = 0.9995,
+    state: RLSState | None = None,
+    axis: str = KRLS_SHARD_AXIS,
+) -> tuple[RLSState, StepOut]:
+    """Stream driver on the sharded layout: scan over time *inside* one
+    shard_map, so the whole stream is a single program with one psum/tick.
+
+    ``xs (n, d)`` / ``ys (n,)`` are replicated (each tick is one global
+    sample — the single-stream setting; the bank engine handles multi-tenant
+    batches). Numerically equivalent to :func:`rff_krls_run` to ~1e-5.
+    """
+    if state is None:
+        state = sharded_krls_init(
+            mesh, rff.num_features, lam, rff.omega.dtype, axis
+        )
+    rff = shard_krls_rff(mesh, rff, axis)
+    program = _sharded_krls_run_program(mesh, axis, beta, rff.num_features)
+    theta, pmat, step, outs = program(
+        rff.omega, rff.bias, state.theta, state.pmat, state.step, xs, ys
+    )
+    return RLSState(theta=theta, pmat=pmat, step=step), outs

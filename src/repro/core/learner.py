@@ -32,12 +32,18 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.klms import (
-    StepOut,
     rff_klms_init,
     rff_klms_step,
     rff_nklms_step,
 )
-from repro.core.krls import rff_krls_init, rff_krls_step
+from repro.core.krls import (
+    KRLS_SHARD_AXIS,
+    make_sharded_krls_predict,
+    make_sharded_krls_step,
+    rff_krls_init,
+    rff_krls_step,
+    sharded_krls_init,
+)
 from repro.core.krls_ald import ald_krls_init, ald_krls_predict, ald_krls_step
 from repro.core.qklms import qklms_init, qklms_predict, qklms_step
 from repro.core.rff import RFF, rff_features
@@ -47,6 +53,7 @@ __all__ = [
     "klms_learner",
     "nklms_learner",
     "krls_learner",
+    "sharded_krls_learner",
     "qklms_learner",
     "ald_krls_learner",
 ]
@@ -122,6 +129,32 @@ def krls_learner(
         ),
         step_fn=lambda s, x, y: rff_krls_step(s, (x, y), rff, beta),
         predict_fn=lambda s, x: rff_features(rff, x) @ s.theta,
+    )
+
+
+def sharded_krls_learner(
+    mesh,
+    rff: RFF,
+    lam: float = 1e-4,
+    beta: float = 0.9995,
+    axis: str = KRLS_SHARD_AXIS,
+) -> OnlineLearner:
+    """RFFKRLS with ``P`` row-sharded over mesh ``axis`` (one psum/tick).
+
+    Drop-in replacement for :func:`krls_learner` past the single-chip memory
+    wall: state leaves are globally-shaped arrays carrying the
+    ``core.krls.krls_state_specs`` layout, and step/predict are jitted
+    ``shard_map`` programs. Numerically equivalent to the dense adapter to
+    ~1e-5 (tested over 500+ ticks on an 8-way host mesh).
+    """
+    step = make_sharded_krls_step(mesh, rff, beta, axis)
+    predict = make_sharded_krls_predict(mesh, rff, axis)
+    return OnlineLearner(
+        init_fn=lambda key=None: sharded_krls_init(
+            mesh, rff.num_features, lam, rff.omega.dtype, axis
+        ),
+        step_fn=step,
+        predict_fn=predict,
     )
 
 

@@ -3,6 +3,9 @@
 ``rff_features``: fused feature-map GEMM+cos (the paper's O(Dd) hot spot).
 ``rff_klms_bank_step``: fully-fused KLMS step (featurize+predict+update) for
 a bank of B filters — the serving hot path; z never leaves VMEM.
+``rff_krls_bank_step``: fully-fused EW-RLS step (featurize+predict+rank-1
+P downdate) for a bank of B KRLS tenants — one VMEM-resident (D, D) tile
+per tenant per tick.
 ``rff_attention``: chunked causal linear attention with fixed-size VMEM state
 (the paper's insight applied to the attention kernel).
 ``flash_attention``: blocked online-softmax attention (the full-attention
@@ -18,6 +21,7 @@ from repro.kernels.ops import (
     rff_attention_decode,
     rff_features,
     rff_klms_bank_step,
+    rff_krls_bank_step,
 )
 
 __all__ = [
@@ -25,6 +29,7 @@ __all__ = [
     "ref",
     "rff_features",
     "rff_klms_bank_step",
+    "rff_krls_bank_step",
     "rff_attention",
     "rff_attention_decode",
     "flash_attention",

@@ -16,12 +16,14 @@ from repro.kernels import ref
 from repro.kernels.rff_features import rff_features_pallas
 from repro.kernels.rff_attention import rff_attention_pallas
 from repro.kernels.rff_klms_step import rff_klms_bank_step_pallas
+from repro.kernels.rff_krls_step import rff_krls_bank_step_pallas
 from repro.kernels.flash_attention import flash_attention_pallas
 
 __all__ = [
     "default_backend",
     "rff_features",
     "rff_klms_bank_step",
+    "rff_krls_bank_step",
     "rff_attention",
     "rff_attention_decode",
     "flash_attention",
@@ -94,6 +96,33 @@ def rff_klms_bank_step(
     return rff_klms_bank_step_pallas(
         theta, x, y, w, b, jnp.asarray(mu, theta.dtype),
         block_b=block_b, interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def rff_krls_bank_step(
+    theta: jax.Array,
+    pmat: jax.Array,
+    x: jax.Array,
+    y: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    beta: jax.Array | float,
+    *,
+    mode: str = "auto",
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """Fused featurize+predict+RLS-downdate step for a bank of B tenants.
+
+    theta (B, D), pmat (B, D, D), x (B, d), y (B,), shared w (d, D) /
+    b (D,), beta scalar or (B,). Returns (theta_new, pmat_new, predictions,
+    prior errors).
+    """
+    use_pallas, interpret = _use_pallas(mode)
+    if not use_pallas:
+        return ref.rff_krls_bank_step_ref(theta, pmat, x, y, w, b, beta)
+    return rff_krls_bank_step_pallas(
+        theta, pmat, x, y, w, b, jnp.asarray(beta, theta.dtype),
+        interpret=interpret,
     )
 
 

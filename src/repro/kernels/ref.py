@@ -9,6 +9,7 @@ import jax.numpy as jnp
 __all__ = [
     "rff_features_ref",
     "rff_klms_bank_step_ref",
+    "rff_krls_bank_step_ref",
     "rff_attention_ref",
     "rff_attention_state_ref",
     "flash_attention_ref",
@@ -32,6 +33,28 @@ def rff_klms_bank_step_ref(theta, x, y, w, b, mu):
     err = y - pred
     mu = jnp.broadcast_to(jnp.asarray(mu, theta.dtype), err.shape)
     return theta + (mu * err)[:, None] * z, pred, err
+
+
+def rff_krls_bank_step_ref(theta, pmat, x, y, w, b, beta):
+    """Two-pass fused-KRLS-step oracle — for kernels/rff_krls_step.py.
+
+    Exactly the EW-RLS recursion of ``core.krls.rls_step`` (including the
+    symmetrization pass) vmapped over the bank: theta (B, D),
+    pmat (B, D, D), x (B, d), y (B,), beta scalar or (B,) per-tenant
+    forgetting factors. Materializes z and pz in HBM (the round-trips the
+    fused kernel removes).
+    """
+    z = rff_features_ref(x, w, b)  # (B, D)
+    pred = jnp.sum(theta * z, axis=-1)
+    err = y - pred
+    beta = jnp.broadcast_to(jnp.asarray(beta, theta.dtype), err.shape)
+    pz = jnp.einsum("bij,bj->bi", pmat, z)  # (B, D)
+    denom = beta + jnp.sum(z * pz, axis=-1)
+    gain = pz / denom[:, None]
+    theta_new = theta + gain * err[:, None]
+    pmat_new = (pmat - gain[:, :, None] * pz[:, None, :]) / beta[:, None, None]
+    pmat_new = 0.5 * (pmat_new + jnp.swapaxes(pmat_new, -1, -2))
+    return theta_new, pmat_new, pred, err
 
 
 def rff_attention_ref(phi_q, phi_k, v, normalize=True, eps=1e-6):

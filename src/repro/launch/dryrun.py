@@ -18,13 +18,11 @@ Usage:
 """
 import argparse
 import dataclasses
-import functools
 import json
 import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import ARCH_IDS, SHAPES, get_config

@@ -12,7 +12,16 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "data_axes", "DP_AXES", "MODEL_AXIS"]
+from repro.core.krls import KRLS_SHARD_AXIS
+
+__all__ = [
+    "make_production_mesh",
+    "make_krls_mesh",
+    "data_axes",
+    "DP_AXES",
+    "MODEL_AXIS",
+    "KRLS_SHARD_AXIS",
+]
 
 MODEL_AXIS = "model"
 
@@ -21,6 +30,17 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
+
+
+def make_krls_mesh(n_shards: int | None = None) -> jax.sharding.Mesh:
+    """1-D mesh over the KRLS shard axis (the P row-block partition).
+
+    Defaults to every visible device; for host-platform simulation set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` before first jax
+    use (the pattern tests/test_krls_sharded.py runs in a subprocess).
+    """
+    n = n_shards if n_shards is not None else jax.device_count()
+    return jax.make_mesh((n,), (KRLS_SHARD_AXIS,))
 
 
 def data_axes(mesh: jax.sharding.Mesh) -> tuple[str, ...]:

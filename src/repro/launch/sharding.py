@@ -25,7 +25,6 @@ from __future__ import annotations
 from typing import Any, Optional
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig
@@ -37,6 +36,9 @@ __all__ = [
     "moment_specs",
     "batch_specs",
     "decode_state_specs",
+    "krls_state_shardings",
+    "krls_feature_shardings",
+    "krls_shard_bytes",
     "named",
 ]
 
@@ -269,6 +271,59 @@ def param_shardings(cfg: ModelConfig, mesh: Mesh, params_shape: Any) -> Any:
     return jax.tree.map(
         lambda s: NamedSharding(mesh, s), param_specs(cfg, mesh, params_shape)
     )
+
+
+def krls_state_shardings(mesh: Mesh, axis: str | None = None):
+    """NamedShardings for the sharded-KRLS ``RLSState`` on ``mesh``.
+
+    theta ``(D,)`` and the inverse correlation ``P (D, D)`` are row-block
+    partitioned over the shard axis; the step counter is replicated. The
+    specs themselves live with the math in ``core.krls`` — this wrapper is
+    the deployment-layer entry point (device_put targets).
+    """
+    from repro.core.krls import KRLS_SHARD_AXIS, krls_state_specs
+
+    specs = krls_state_specs(axis or KRLS_SHARD_AXIS)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+
+def krls_feature_shardings(mesh: Mesh, axis: str | None = None):
+    """NamedShardings for the RFF bank: omega/bias column-partitioned so
+    each shard featurizes exactly its P row block's slice."""
+    from repro.core.krls import KRLS_SHARD_AXIS, krls_feature_specs
+
+    specs = krls_feature_specs(axis or KRLS_SHARD_AXIS)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs)
+
+
+def krls_shard_bytes(
+    num_features: int,
+    n_shards: int,
+    input_dim: int = 0,
+    itemsize: int = 4,
+) -> dict:
+    """Per-shard memory model for sharded RFF-KRLS (the ROADMAP's VMEM/HBM
+    budget arithmetic).
+
+    Dominant term: the ``(D/n, D)`` P row block. Per tick each shard also
+    materializes the full ``(2D+1,)`` psum payload (pz ++ scattered z ++
+    partial prediction) plus its local ``(D/n,)`` slices.
+    """
+    d, n = num_features, n_shards
+    if d % n:
+        raise ValueError(f"D={d} must divide n_shards={n}")
+    p_block = d * (d // n) * itemsize
+    features = (input_dim + 1) * (d // n) * itemsize  # omega cols + bias
+    theta = (d // n) * itemsize
+    tick_payload = (2 * d + 1) * itemsize  # the one psum per tick
+    return {
+        "p_block_bytes": p_block,
+        "feature_bytes": features,
+        "theta_bytes": theta,
+        "tick_payload_bytes": tick_payload,
+        "total_bytes": p_block + features + theta + tick_payload,
+        "dense_p_bytes": d * d * itemsize,
+    }
 
 
 def batch_specs(mesh: Mesh, *, batch: int, kind: str) -> P:

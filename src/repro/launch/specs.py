@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import SHAPES, ModelConfig, ShapeSpec
+from repro.configs.base import ModelConfig, ShapeSpec
 from repro.launch.mesh import data_axes
 from repro.launch.sharding import batch_specs, decode_state_specs
 from repro.models import transformer

@@ -7,7 +7,6 @@ keeps prefill memory at O(S · block) instead of O(S^2) — required for the
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple, Optional
 
 import jax

@@ -24,9 +24,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.rff import RFF, positive_random_features, rff_features, sample_prf, sample_rff
+from repro.core.rff import RFF, positive_random_features, sample_prf
 from repro.kernels import ops
-from repro.models.layers import apply_rope, dense, dense_init, rope_freqs
+from repro.models.layers import apply_rope, rope_freqs
 
 __all__ = [
     "rff_attn_init",

@@ -16,7 +16,7 @@ from __future__ import annotations
 
 import functools
 from dataclasses import replace
-from typing import Any, NamedTuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -1,8 +1,11 @@
 from repro.serve.serve_loop import generate, prefill_tokens
 from repro.serve.bank_loop import (
     make_bank_server,
+    make_krls_bank_server,
+    reset_krls_tenants,
     reset_tenants,
     serve_bank_stream,
+    serve_krls_bank_stream,
 )
 
 __all__ = [
@@ -11,4 +14,7 @@ __all__ = [
     "make_bank_server",
     "serve_bank_stream",
     "reset_tenants",
+    "make_krls_bank_server",
+    "serve_krls_bank_stream",
+    "reset_krls_tenants",
 ]

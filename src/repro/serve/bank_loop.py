@@ -12,6 +12,12 @@ slot is a ``(D,)`` row, reset by zeroing it.
 reused every tick); ``serve_bank_stream`` scans a whole ``(B, n)`` traffic
 matrix through it under a single jit — the benchmark's "≥64 concurrent
 streams, one jitted call" path.
+
+KRLS tenants (``make_krls_bank_server`` / ``serve_krls_bank_stream``) get
+the same treatment through the fused RLS bank kernel: per-tenant state is a
+``(D,)`` theta plus a ``(D, D)`` inverse correlation, still fixed-size, so
+admission stays O(1) — a slot reset re-seeds theta to zero and P to
+``I / lam`` (``reset_krls_tenants``).
 """
 from __future__ import annotations
 
@@ -21,11 +27,24 @@ from typing import Callable, Optional, Union
 import jax
 import jax.numpy as jnp
 
-from repro.core.bank import klms_bank_init, klms_bank_run, klms_bank_step
+from repro.core.bank import (
+    klms_bank_run,
+    klms_bank_step,
+    krls_bank_run,
+    krls_bank_step,
+)
 from repro.core.klms import LMSState, StepOut
+from repro.core.krls import RLSState
 from repro.core.rff import RFF
 
-__all__ = ["make_bank_server", "serve_bank_stream", "reset_tenants"]
+__all__ = [
+    "make_bank_server",
+    "serve_bank_stream",
+    "reset_tenants",
+    "make_krls_bank_server",
+    "serve_krls_bank_stream",
+    "reset_krls_tenants",
+]
 
 
 def make_bank_server(
@@ -63,3 +82,43 @@ def reset_tenants(state: LMSState, slots: jax.Array) -> LMSState:
     theta = state.theta.at[slots].set(0.0)
     step = state.step.at[slots].set(0)
     return LMSState(theta=theta, step=step)
+
+
+def make_krls_bank_server(
+    rff: RFF, beta: Union[float, jax.Array] = 0.9995, mode: str = "auto"
+) -> Callable[[RLSState, jax.Array, jax.Array], tuple[RLSState, StepOut]]:
+    """Jitted per-tick KRLS server: ``(state, xs (B,d), ys (B,)) ->
+    (state, StepOut)`` through the fused RLS bank kernel."""
+
+    @jax.jit
+    def tick(state: RLSState, xs: jax.Array, ys: jax.Array):
+        return krls_bank_step(state, xs, ys, rff, beta, mode=mode)
+
+    return tick
+
+
+@functools.partial(jax.jit, static_argnames=("mode",))
+def serve_krls_bank_stream(
+    rff: RFF,
+    xs: jax.Array,
+    ys: jax.Array,
+    lam: float = 1e-4,
+    beta: Union[float, jax.Array] = 0.9995,
+    state: Optional[RLSState] = None,
+    mode: str = "auto",
+) -> tuple[RLSState, StepOut]:
+    """Serve B KRLS tenant streams ``xs (B, n, d)``, ``ys (B, n)``."""
+    return krls_bank_run(rff, xs, ys, lam=lam, beta=beta, state=state, mode=mode)
+
+
+def reset_krls_tenants(
+    state: RLSState, slots: jax.Array, lam: float = 1e-4
+) -> RLSState:
+    """Re-admit KRLS tenants: theta -> 0, P -> I/lam, step -> 0 per slot."""
+    dfeat = state.theta.shape[-1]
+    theta = state.theta.at[slots].set(0.0)
+    pmat = state.pmat.at[slots].set(
+        jnp.eye(dfeat, dtype=state.pmat.dtype) / lam
+    )
+    step = state.step.at[slots].set(0)
+    return RLSState(theta=theta, pmat=pmat, step=step)

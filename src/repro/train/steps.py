@@ -11,7 +11,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import transformer
-from repro.optim.optimizers import AdamWState, adamw_init, adamw_update, global_norm
+from repro.optim.optimizers import adamw_init, adamw_update, global_norm
 from repro.optim import schedules
 
 __all__ = [

@@ -7,7 +7,7 @@ import pytest
 pytest.importorskip("hypothesis", reason="optional dep: property tests")
 from hypothesis import given, settings, strategies as st
 
-from repro.core.rff import gaussian_kernel, kernel_estimate, rff_features, sample_rff
+from repro.core.rff import kernel_estimate, rff_features, sample_rff
 from repro.core.klms import lms_step
 from repro.core.distributed import dequantize_int8, quantize_int8
 from repro.kernels import ref

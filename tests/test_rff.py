@@ -5,7 +5,6 @@ import numpy as np
 import pytest
 
 from repro.core.rff import (
-    RFF,
     gaussian_kernel,
     kernel_estimate,
     positive_random_features,

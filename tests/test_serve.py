@@ -9,7 +9,6 @@ from repro.configs import get_config
 from repro.models import (
     decode_state_init,
     decode_step,
-    forward,
     init_params,
     with_rff_attention,
 )
