@@ -34,7 +34,12 @@ from repro.core.bank import klms_bank_init, klms_bank_run
 from repro.core.rff import sample_rff
 from repro.kernels import ops, ref
 
-__all__ = ["bench_bank_fused_vs_twopass", "bench_bank_streams", "main"]
+__all__ = [
+    "bench_bank_fused_vs_twopass",
+    "bench_bank_streams",
+    "bench_bank_chunked_streams",
+    "main",
+]
 
 
 def bench_bank_fused_vs_twopass(
@@ -103,6 +108,35 @@ def bench_bank_streams(
     }
 
 
+def bench_bank_chunked_streams(
+    bank: int = 64, n: int = 256, d: int = 8, dfeat: int = 256,
+    chunk: int = 16,
+):
+    """The streams bench on the chunked schedule (one launch per T ticks
+    inside the jit instead of a per-tick scan). derived = stream-steps/s;
+    compare against ``bench_bank_streams`` for the in-jit chunking effect
+    (the out-of-jit dispatch-amortization story lives in chunk_bench.py).
+    """
+    rff = sample_rff(jax.random.PRNGKey(0), d, dfeat, sigma=2.0)
+    ks = jax.random.split(jax.random.PRNGKey(1), 2)
+    xs = jax.random.normal(ks[0], (bank, n, d))
+    ys = jax.random.normal(ks[1], (bank, n))
+    state = klms_bank_init(rff, bank)
+
+    fn = jax.jit(
+        lambda s, xx, yy: klms_bank_run(
+            rff, xx, yy, 0.5, state=s, mode="auto", chunk=chunk
+        )
+    )
+    dt = _time(lambda: fn(state, xs, ys), iters=5)
+    return dt / (bank * n) * 1e6, bank * n / dt, {
+        "seconds": dt,
+        "bank": bank,
+        "steps": n,
+        "chunk": chunk,
+    }
+
+
 def main(argv=None) -> None:
     """Emit the KLMS bank benchmarks as a ``BENCH_bank.json`` artifact."""
     ap = argparse.ArgumentParser()
@@ -113,9 +147,11 @@ def main(argv=None) -> None:
     if args.tiny:
         fused_kw = dict(bank=8, d=4, dfeat=64)
         stream_kw = dict(bank=8, n=32, d=4, dfeat=64)
+        chunk_kw = dict(bank=8, n=32, d=4, dfeat=64, chunk=8)
     else:
         fused_kw = dict(bank=64, d=8, dfeat=512)
         stream_kw = dict(bank=64, n=256, d=8, dfeat=256)
+        chunk_kw = dict(bank=64, n=256, d=8, dfeat=256, chunk=16)
 
     records = []
     us, derived, detail = bench_bank_fused_vs_twopass(**fused_kw)
@@ -128,6 +164,13 @@ def main(argv=None) -> None:
     us, derived, detail = bench_bank_streams(**stream_kw)
     records.append({
         "bench": "bank_streams",
+        "us_per_step": us,
+        "stream_steps_per_s": derived,
+        **detail,
+    })
+    us, derived, detail = bench_bank_chunked_streams(**chunk_kw)
+    records.append({
+        "bench": "bank_chunked_streams",
         "us_per_step": us,
         "stream_steps_per_s": derived,
         **detail,

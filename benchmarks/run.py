@@ -3,14 +3,46 @@
 Prints ``name,us_per_call,derived`` CSV (detail dicts go to stderr-style
 comment lines prefixed with '#'). ``--full`` switches to paper-scale
 Monte-Carlo run counts; default sizes keep the whole suite at CI scale.
+
+Besides the CSV, the harness persists the results as ``BENCH_klms.json`` /
+``BENCH_krls.json`` / ``BENCH_bank.json`` in ``--json-dir`` (default: repo
+root, next to this package) with a stable schema::
+
+    {"suite": "run_<family>", "backend": ..., "jax": ..., "full": bool,
+     "records": [{"bench": ..., "us_per_call": ..., "derived": ...,
+                  "detail": {...}}, ...]}
+
+The committed copies at the repo root are the CPU baselines — re-run and
+commit to track the perf trajectory across PRs instead of losing it with
+CI artifacts. ``--no-json`` disables writing.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 
 from benchmarks import bank_bench, kernels_bench, krls_shard_bench, paper, roofline_report
+
+# bench name -> which BENCH_<family>.json it persists to.
+SUITE_OF = {
+    "fig1_convergence": "klms",
+    "fig2a_klms_vs_qklms": "klms",
+    "fig3a_chaotic1": "klms",
+    "fig3b_chaotic2": "klms",
+    "table1_timing": "klms",
+    "table1_highdim": "klms",
+    "orf_vs_iid": "klms",
+    "kernel_rff_features": "klms",
+    "kernel_rff_attention": "klms",
+    "roofline": "klms",
+    "fig2b_krls": "krls",
+    "krls_bank_fused_vs_twopass": "krls",
+    "bank_fused_vs_twopass": "bank",
+    "bank_streams": "bank",
+    "bank_chunked_streams": "bank",
+}
 
 
 def _krls_bank_fused_vs_twopass():
@@ -24,6 +56,14 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true", help="paper-scale runs")
     ap.add_argument("--only", default=None)
+    ap.add_argument(
+        "--json-dir",
+        default=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        help="where BENCH_<family>.json files land (default: repo root)",
+    )
+    ap.add_argument(
+        "--no-json", action="store_true", help="skip writing BENCH_*.json",
+    )
     args = ap.parse_args()
 
     scale = 4 if args.full else 1
@@ -40,11 +80,15 @@ def main() -> None:
         "kernel_rff_attention": kernels_bench.bench_rff_attention,
         "bank_fused_vs_twopass": bank_bench.bench_bank_fused_vs_twopass,
         "bank_streams": bank_bench.bench_bank_streams,
+        "bank_chunked_streams": bank_bench.bench_bank_chunked_streams,
         "krls_bank_fused_vs_twopass": _krls_bank_fused_vs_twopass,
         "roofline": roofline_report.roofline_table,
     }
+    missing = set(benches) - set(SUITE_OF)
+    assert not missing, f"benches missing a SUITE_OF entry: {sorted(missing)}"
     print("name,us_per_call,derived")
     failures = 0
+    by_suite: dict[str, list] = {}
     for name, fn in benches.items():
         if args.only and args.only != name:
             continue
@@ -52,10 +96,42 @@ def main() -> None:
             us, derived, detail = fn()
             print(f"{name},{us:.3f},{derived:.4f}")
             print(f"# {name}: {json.dumps(detail)[:2000]}", flush=True)
+            by_suite.setdefault(SUITE_OF[name], []).append({
+                "bench": name,
+                "us_per_call": us,
+                "derived": derived,
+                "detail": detail,
+            })
         except Exception as e:  # pragma: no cover
             failures += 1
             print(f"{name},nan,nan")
             print(f"# {name} FAILED: {e!r}", file=sys.stderr, flush=True)
+
+    # Baselines are only trustworthy from a clean full pass: a --only run
+    # or a failing bench would overwrite the committed multi-record files
+    # with a partial record set.
+    if args.only or failures:
+        if not args.no_json:
+            print(
+                "# BENCH_*.json not written (partial/--only or failed run)",
+                flush=True,
+            )
+    elif not args.no_json and by_suite:
+        import jax
+
+        for family, records in sorted(by_suite.items()):
+            payload = {
+                "suite": f"run_{family}",
+                "backend": jax.default_backend(),
+                "jax": jax.__version__,
+                "full": args.full,
+                "records": records,
+            }
+            path = os.path.join(args.json_dir, f"BENCH_{family}.json")
+            with open(path, "w") as f:
+                json.dump(payload, f, indent=2)
+            print(f"# wrote {path}", flush=True)
+
     if failures:
         raise SystemExit(f"{failures} benchmarks failed")
 

@@ -7,25 +7,33 @@ by a *single* jitted call. Because every learner state is a fixed-size pytree
 state whose leaves carry a leading bank axis — no padding, no ragged
 dictionaries, one XLA program regardless of B.
 
-Two tiers:
+Three tiers:
 
 * Generic (any ``OnlineLearner``): :func:`bank_init` / :func:`bank_step` /
-  :func:`bank_run` / :func:`bank_predict` — vmapped adapter calls.
+  :func:`bank_run` / :func:`bank_predict` — vmapped adapter calls. The
+  hyperparam-sweep variants (:func:`hp_bank_init` / :func:`hp_bank_step` /
+  :func:`hp_bank_run`) additionally vmap over a :class:`BankHParams` pytree
+  (mu, beta, lam), so one bank can sweep KRLS forgetting factors AND
+  regularizers — not just the state axis.
 * Fused KLMS fast path: :func:`klms_bank_run` — the bank shares one RFF
   feature map and steps through ``kernels.rff_klms_bank_step`` (the Pallas
   kernel that keeps the feature block in VMEM), with per-filter ``mu``
   supported for step-size sweeps.
 * Fused KRLS fast path: :func:`krls_bank_run` — B tenants of EW-RLS (each a
   ``(D,)`` theta + ``(D, D)`` P) ticked in one pass through
-  ``kernels.rff_krls_bank_step``, with per-tenant ``beta`` supported for
-  forgetting-factor sweeps.
+  ``kernels.rff_krls_bank_step``, with per-tenant ``beta`` (and per-tenant
+  ``lam`` at init) supported for hyperparameter sweeps.
 
 Time is the scan axis and the bank is the batch axis, so the per-tick
 program is exactly the serving hot loop (serve/bank_loop.py wraps it).
+``chunk=T`` switches both fused run-loops from a per-tick scan to a scan
+over T-tick chunks through the time-blocked kernels (one launch per chunk,
+masked final remainder) — the dispatch-amortized schedule the serve queue
+and benchmarks drive.
 """
 from __future__ import annotations
 
-from typing import Optional, Union
+from typing import Callable, NamedTuple, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -41,11 +49,18 @@ __all__ = [
     "bank_step",
     "bank_run",
     "bank_predict",
+    "BankHParams",
+    "bank_hparams",
+    "hp_bank_init",
+    "hp_bank_step",
+    "hp_bank_run",
     "klms_bank_init",
     "klms_bank_step",
+    "klms_bank_chunk_step",
     "klms_bank_run",
     "krls_bank_init",
     "krls_bank_step",
+    "krls_bank_chunk_step",
     "krls_bank_run",
 ]
 
@@ -88,6 +103,79 @@ def bank_predict(learner: OnlineLearner, states, xs: jax.Array) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# Hyperparameter-swept generic bank — vmap over (state, hyperparams), not
+# just state. One bank = a full grid of (mu, beta, lam) candidates.
+# ---------------------------------------------------------------------------
+
+
+class BankHParams(NamedTuple):
+    """Per-tenant hyperparameters, one leading bank axis per leaf.
+
+    A single pytree covering every filter family in core/: KLMS reads
+    ``mu``, EW-RLS reads ``beta`` (forgetting) and ``lam`` (init
+    regularizer). Families ignore fields they don't use, so one struct
+    sweeps heterogeneous grids without per-algorithm plumbing.
+    """
+
+    mu: jax.Array  # (B,) LMS step sizes
+    beta: jax.Array  # (B,) RLS forgetting factors
+    lam: jax.Array  # (B,) RLS init regularizers
+
+
+def bank_hparams(
+    size: int,
+    mu: Union[float, jax.Array] = 0.5,
+    beta: Union[float, jax.Array] = 0.9995,
+    lam: Union[float, jax.Array] = 1e-4,
+    dtype: jnp.dtype = jnp.float32,
+) -> BankHParams:
+    """Broadcast scalars / ``(B,)`` arrays into a full ``BankHParams``."""
+
+    def to_b(v):
+        return jnp.broadcast_to(jnp.asarray(v, dtype), (size,))
+
+    return BankHParams(mu=to_b(mu), beta=to_b(beta), lam=to_b(lam))
+
+
+def hp_bank_init(
+    init_fn: Callable,
+    hparams: BankHParams,
+    key: Optional[jax.Array] = None,
+):
+    """Batched state from a per-tenant init: ``init_fn(hp, key) -> state``.
+
+    ``init_fn`` sees one ``BankHParams`` row (scalar leaves) — e.g. a KRLS
+    init reading ``hp.lam`` so every tenant gets its own ``P_0 = I/lam``.
+    """
+    size = hparams.mu.shape[0]
+    keys = jax.random.split(
+        key if key is not None else jax.random.PRNGKey(0), size
+    )
+    return jax.vmap(init_fn)(hparams, keys)
+
+
+def hp_bank_step(
+    step_fn: Callable, states, hparams: BankHParams, xs: jax.Array, ys: jax.Array
+):
+    """One lockstep tick of ``step_fn(state, hp, x, y)`` across the bank."""
+    return jax.vmap(step_fn)(states, hparams, xs, ys)
+
+
+def hp_bank_run(
+    step_fn: Callable, states, hparams: BankHParams, xs: jax.Array, ys: jax.Array
+):
+    """Drive B hyperparameter candidates ``xs (B, n, d)`` under one scan."""
+
+    def body(s, xy):
+        return hp_bank_step(step_fn, s, hparams, *xy)
+
+    xs_t = jnp.swapaxes(xs, 0, 1)
+    ys_t = jnp.swapaxes(ys, 0, 1)
+    states, outs = jax.lax.scan(body, states, (xs_t, ys_t))
+    return states, jax.tree.map(lambda a: jnp.swapaxes(a, 0, 1), outs)
+
+
+# ---------------------------------------------------------------------------
 # Fused KLMS bank — shared feature map, Pallas hot path.
 # ---------------------------------------------------------------------------
 
@@ -120,6 +208,32 @@ def klms_bank_step(
     )
 
 
+def klms_bank_chunk_step(
+    state: LMSState,
+    xs: jax.Array,
+    ys: jax.Array,
+    rff: RFF,
+    mu: Union[float, jax.Array],
+    mask: Optional[jax.Array] = None,
+    mode: str = "auto",
+) -> tuple[LMSState, StepOut]:
+    """T ticks for the whole bank in one launch: ``xs (B, T, d)``,
+    ``ys (B, T)``, optional ``mask (B, T)`` validity gate (the serve
+    queue's ragged-arrival chunks). Masked ticks don't advance ``step``."""
+    theta, pred, err = ops.rff_klms_bank_chunk(
+        state.theta, xs, ys, rff.omega, rff.bias, mu, mask, mode=mode
+    )
+    ticks = (
+        ys.shape[1]
+        if mask is None
+        else jnp.sum(mask, axis=1).astype(state.step.dtype)
+    )
+    return (
+        LMSState(theta=theta, step=state.step + ticks),
+        StepOut(prediction=pred, error=err),
+    )
+
+
 def klms_bank_run(
     rff: RFF,
     xs: jax.Array,
@@ -127,15 +241,28 @@ def klms_bank_run(
     mu: Union[float, jax.Array],
     state: Optional[LMSState] = None,
     mode: str = "auto",
+    chunk: Optional[int] = None,
 ) -> tuple[LMSState, StepOut]:
     """Serve B KLMS streams ``xs (B, n, d)``, ``ys (B, n)`` in one jit.
 
     ``mu`` may be a scalar (per-tenant isolation with shared hyperparams) or
     ``(B,)`` (step-size sweep: one stream per candidate mu). Matches B
     sequential ``rff_klms_run`` calls numerically (tested).
+
+    ``chunk=T`` scans over T-tick chunks through the time-blocked kernel
+    (one launch per chunk, zero-masked final remainder) instead of ticks —
+    bitwise identical to the per-tick schedule (tested) at 1/T the
+    dispatches and theta round-trips.
     """
     if state is None:
         state = klms_bank_init(rff, xs.shape[0])
+    if chunk is not None:
+        theta, pred, err = ops.rff_klms_bank_chunk(
+            state.theta, xs, ys, rff.omega, rff.bias, mu,
+            mode=mode, chunk=chunk,
+        )
+        state = LMSState(theta=theta, step=state.step + ys.shape[1])
+        return state, StepOut(prediction=pred, error=err)
 
     def body(s, xy):
         x_t, y_t = xy
@@ -156,15 +283,25 @@ def klms_bank_run(
 def krls_bank_init(
     rff: RFF,
     size: int,
-    lam: float = 1e-4,
+    lam: Union[float, jax.Array] = 1e-4,
     dtype: Optional[jnp.dtype] = None,
 ) -> RLSState:
-    """Batched ``RLSState``: theta ``(B, D)``, pmat ``(B, D, D)``."""
-    single = rff_krls_init(
-        rff.num_features, lam, dtype or rff.omega.dtype
-    )
-    return jax.tree.map(
+    """Batched ``RLSState``: theta ``(B, D)``, pmat ``(B, D, D)``.
+
+    ``lam`` may be a scalar or ``(B,)`` — per-tenant regularizers, so one
+    bank sweeps ``P_0 = I/lam`` alongside per-tenant ``beta`` (the ROADMAP
+    per-tenant-hyperparams item for the KRLS family).
+    """
+    dt = dtype or rff.omega.dtype
+    single = rff_krls_init(rff.num_features, 1.0, dt)
+    state = jax.tree.map(
         lambda a: jnp.broadcast_to(a, (size,) + a.shape), single
+    )
+    lam_b = jnp.broadcast_to(jnp.asarray(lam, dt), (size,))
+    return RLSState(
+        theta=state.theta,
+        pmat=state.pmat / lam_b[:, None, None],
+        step=state.step,
     )
 
 
@@ -186,24 +323,66 @@ def krls_bank_step(
     )
 
 
+def krls_bank_chunk_step(
+    state: RLSState,
+    xs: jax.Array,
+    ys: jax.Array,
+    rff: RFF,
+    beta: Union[float, jax.Array] = 0.9995,
+    mask: Optional[jax.Array] = None,
+    mode: str = "auto",
+) -> tuple[RLSState, StepOut]:
+    """T RLS ticks for the whole bank in one launch: ``xs (B, T, d)``,
+    ``ys (B, T)``, optional ``mask (B, T)`` validity gate. Masked ticks
+    don't advance ``step`` and leave theta/P untouched."""
+    theta, pmat, pred, err = ops.rff_krls_bank_chunk(
+        state.theta, state.pmat, xs, ys, rff.omega, rff.bias, beta, mask,
+        mode=mode,
+    )
+    ticks = (
+        ys.shape[1]
+        if mask is None
+        else jnp.sum(mask, axis=1).astype(state.step.dtype)
+    )
+    return (
+        RLSState(theta=theta, pmat=pmat, step=state.step + ticks),
+        StepOut(prediction=pred, error=err),
+    )
+
+
 def krls_bank_run(
     rff: RFF,
     xs: jax.Array,
     ys: jax.Array,
-    lam: float = 1e-4,
+    lam: Union[float, jax.Array] = 1e-4,
     beta: Union[float, jax.Array] = 0.9995,
     state: Optional[RLSState] = None,
     mode: str = "auto",
+    chunk: Optional[int] = None,
 ) -> tuple[RLSState, StepOut]:
     """Serve B KRLS streams ``xs (B, n, d)``, ``ys (B, n)`` in one jit.
 
-    ``beta`` may be a scalar or ``(B,)`` (forgetting-factor sweep: one
-    stream per candidate beta — the ROADMAP's per-tenant-hyperparams item
+    ``beta`` / ``lam`` may be scalars or ``(B,)`` (hyperparameter sweeps:
+    one stream per candidate — the ROADMAP's per-tenant-hyperparams item
     for the KRLS family). Matches B sequential ``rff_krls_run`` calls to
     f32 accumulation-order tolerance (tested).
+
+    ``chunk=T`` scans over T-tick chunks through the time-blocked kernel
+    (one launch per chunk, zero-masked final remainder) — equivalent to the
+    per-tick schedule to reduction-order tolerance (tested) at 1/T the
+    dispatches and P round-trips.
     """
     if state is None:
         state = krls_bank_init(rff, xs.shape[0], lam)
+    if chunk is not None:
+        theta, pmat, pred, err = ops.rff_krls_bank_chunk(
+            state.theta, state.pmat, xs, ys, rff.omega, rff.bias, beta,
+            mode=mode, chunk=chunk,
+        )
+        state = RLSState(
+            theta=theta, pmat=pmat, step=state.step + ys.shape[1]
+        )
+        return state, StepOut(prediction=pred, error=err)
 
     def body(s, xy):
         x_t, y_t = xy

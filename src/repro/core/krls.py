@@ -36,6 +36,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core.distributed import _mark_varying, _shard_map
 from repro.core.klms import StepOut
 from repro.core.rff import RFF, rff_features
+from repro.kernels.chunking import time_blocks, unblock_time, valid_time_mask
 
 __all__ = [
     "RLSState",
@@ -48,6 +49,7 @@ __all__ = [
     "shard_krls_rff",
     "sharded_krls_init",
     "make_sharded_krls_step",
+    "make_sharded_krls_block_step",
     "make_sharded_krls_predict",
     "sharded_krls_run",
 ]
@@ -108,15 +110,61 @@ def rff_krls_run(
     lam: float = 1e-4,
     beta: float = 0.9995,
     state: RLSState | None = None,
+    chunk: int | None = None,
 ) -> tuple[RLSState, StepOut]:
-    """Stream driver. Paper §6 settings: lam=1e-4, beta=0.9995, D=300."""
+    """Stream driver. Paper §6 settings: lam=1e-4, beta=0.9995, D=300.
+
+    ``chunk=T`` scans over T-tick chunks: each chunk featurizes its T
+    samples in one ``(T, d) @ (d, D)`` GEMM and replays the sequential RLS
+    recursion over the precomputed rows (zero-masked final remainder).
+    Matches the per-tick scan to feature-GEMM rounding (tested).
+    """
     if state is None:
         state = rff_krls_init(rff.num_features, lam, rff.omega.dtype)
+    if chunk is not None:
+        return _rff_krls_run_chunked(rff, xs, ys, beta, state, chunk)
 
     def body(s, xy):
         return rff_krls_step(s, xy, rff, beta)
 
     return jax.lax.scan(body, state, (xs, ys))
+
+
+def _rff_krls_run_chunked(
+    rff: RFF,
+    xs: jax.Array,
+    ys: jax.Array,
+    beta: float,
+    state: RLSState,
+    chunk: int,
+) -> tuple[RLSState, StepOut]:
+    """Chunked scan: featurize T samples per GEMM, replay ticks in-chunk."""
+    n = xs.shape[0]
+    xs_c = time_blocks(xs, chunk)
+    ys_c = time_blocks(ys, chunk)
+    mask_c = valid_time_mask(n, chunk, xs.dtype)
+
+    def body(s: RLSState, args):
+        xc, yc, mc = args
+        zc = rff_features(rff, xc)  # (T, D) — one GEMM per chunk
+
+        def tick(st: RLSState, zym):
+            z, y, m = zym
+            theta, pmat, out = rls_step(st.theta, st.pmat, z, y, beta)
+            keep = m > 0
+            return (
+                RLSState(
+                    theta=jnp.where(keep, theta, st.theta),
+                    pmat=jnp.where(keep, pmat, st.pmat),
+                    step=st.step + m.astype(st.step.dtype),
+                ),
+                out,
+            )
+
+        return jax.lax.scan(tick, s, (zc, yc, mc))
+
+    state, outs = jax.lax.scan(body, state, (xs_c, ys_c, mask_c))
+    return state, jax.tree.map(lambda a: unblock_time(a, n), outs)
 
 
 # ---------------------------------------------------------------------------
@@ -224,6 +272,96 @@ def _sharded_rls_tick(
     return theta_l, pmat_l, StepOut(prediction=y_hat, error=err)
 
 
+def _sharded_rls_block_tick(
+    theta_l: jax.Array,  # (Dn,) local row block
+    pmat_l: jax.Array,  # (Dn, D) local row block
+    omega_l: jax.Array,  # (d, Dn) local feature columns
+    bias_l: jax.Array,  # (Dn,)
+    xs: jax.Array,  # (k, d) replicated block of samples
+    ys: jax.Array,  # (k,) replicated
+    mask: jax.Array,  # (k,) replicated validity gate (1 = real tick)
+    beta: float,
+    axis: str,
+    num_features: int,
+) -> tuple[jax.Array, jax.Array, StepOut]:
+    """k sharded EW-RLS ticks with ONE psum — the combine_every block.
+
+    The per-tick path pays one ``(2D+1,)`` psum per sample. Here each shard
+    featurizes its slice for all k samples, contributes the *block-start*
+    partial matvecs ``P_0^T z_j`` and predictions ``theta_0 . z_j``, and a
+    single packed ``(k, 2D+1)`` psum replicates them. The k-tick recursion
+    is then replayed exactly from those block-start quantities:
+
+        P_{i+1} z = (P_i z - (pz_i . z / denom_i) pz_i) / beta
+        theta_{i+1} . z = theta_i . z + (e_i / denom_i)(pz_i . z)
+
+    i.e. every per-tick ``pz_j = P_j z_j``, gain denominator and prior error
+    is an O(k^2 D) combination of the psum'd vectors — pure replicated
+    local work, no further collectives. The restructuring is algebraically
+    EXACT (this is the fixed-size-state dividend: k rank-1 updates commute
+    into closed form); only floating-point summation order differs from the
+    per-tick path, and tests bound that drift at 1e-5 f32 / 1e-8 f64.
+    Masked ticks (mask=0) contribute nothing and skip their downdate.
+    """
+    k = xs.shape[0]
+    dfull = num_features
+    dloc = theta_l.shape[0]
+    offset = jax.lax.axis_index(axis) * dloc
+
+    scale = jnp.sqrt(2.0 / dfull).astype(omega_l.dtype)
+    z_l = scale * jnp.cos(xs @ omega_l + bias_l)  # (k, Dn) local slices
+    pz0_part = z_l @ pmat_l  # (k, D) — P_0^T z_j contributions (P sym)
+    yhat0_part = z_l @ theta_l  # (k,) partial block-start predictions
+    zero = jnp.zeros((), offset.dtype)  # match axis_index dtype under x64
+    z_scat = jax.lax.dynamic_update_slice(
+        jnp.zeros((k, dfull), z_l.dtype), z_l, (zero, offset)
+    )
+    packed = jnp.concatenate(
+        [pz0_part, z_scat, yhat0_part[:, None]], axis=1
+    )
+    packed = jax.lax.psum(packed, axis)  # the block's ONE collective
+
+    pz0 = packed[:, :dfull]  # (k, D) P_0 z_j
+    z = packed[:, dfull : 2 * dfull]  # (k, D) full feature vectors
+    yhat0 = packed[:, 2 * dfull]  # (k,) theta_0 . z_j
+
+    # Replicated replay (k is static -> unrolled; O(k^2 D) VPU work).
+    pzs, inv_dens, errs_m, preds, errs = [], [], [], [], []
+    for j in range(k):
+        v = pz0[j]
+        yh = yhat0[j]
+        for i in range(j):
+            c = pzs[i] @ z[j]
+            corr = c * inv_dens[i]
+            v = (v - (mask[i] * corr) * pzs[i]) / jnp.where(
+                mask[i] > 0, beta, 1.0
+            )
+            yh = yh + errs_m[i] * corr
+        inv_den = 1.0 / (beta + z[j] @ v)
+        e = ys[j] - yh
+        pzs.append(v)
+        inv_dens.append(inv_den)
+        errs_m.append(mask[j] * e)
+        preds.append(yh)
+        errs.append(e)
+
+    # Local state: theta additions commute into one (k,) @ (k, Dn) matvec;
+    # P downdates replay in order with the exactly-symmetric (pz_i pz_j)
+    # form (same commutative-rounding argument as the per-tick path).
+    pz_mat = jnp.stack(pzs)  # (k, D)
+    pz_loc = jax.lax.dynamic_slice(pz_mat, (zero, offset), (k, dloc))
+    coeff = jnp.stack(errs_m) * jnp.stack(inv_dens)  # (k,)
+    theta_l = theta_l + coeff @ pz_loc
+    for j in range(k):
+        downd = (
+            pmat_l - jnp.outer(pz_loc[j], pz_mat[j]) * inv_dens[j]
+        ) / beta
+        pmat_l = jnp.where(mask[j] > 0, downd, pmat_l)
+    return theta_l, pmat_l, StepOut(
+        prediction=jnp.stack(preds), error=jnp.stack(errs)
+    )
+
+
 def make_sharded_krls_step(
     mesh: Mesh,
     rff: RFF,
@@ -266,6 +404,53 @@ def make_sharded_krls_step(
     return step_fn
 
 
+def make_sharded_krls_block_step(
+    mesh: Mesh,
+    rff: RFF,
+    beta: float = 0.9995,
+    combine_every: int = 8,
+    axis: str = KRLS_SHARD_AXIS,
+):
+    """Jitted k-tick function ``(state, xs (k, d), ys (k,)) -> (state,
+    StepOut (k,))`` issuing ONE psum per k ticks (``combine_every``).
+
+    The DCN-deployment form of :func:`make_sharded_krls_step`: collective
+    count drops k-fold while the update stays algebraically exact (see
+    :func:`_sharded_rls_block_tick` for the replay construction and its
+    drift bound).
+    """
+    rff = shard_krls_rff(mesh, rff, axis)
+    dfull = rff.num_features
+    k = combine_every
+    sspec = krls_state_specs(axis)
+
+    def body(omega_l, bias_l, theta_l, pmat_l, step, xs, ys):
+        mask = jnp.ones((k,), xs.dtype)
+        theta_l, pmat_l, out = _sharded_rls_block_tick(
+            theta_l, pmat_l, omega_l, bias_l, xs, ys, mask, beta, axis, dfull
+        )
+        return theta_l, pmat_l, step + k, out
+
+    shmapped = _shard_map(
+        body,
+        mesh=mesh,
+        in_specs=(
+            P(None, axis), P(axis), sspec.theta, sspec.pmat, sspec.step,
+            P(), P(),
+        ),
+        out_specs=(sspec.theta, sspec.pmat, sspec.step, P()),
+    )
+
+    @jax.jit
+    def block_step_fn(state: RLSState, xs: jax.Array, ys: jax.Array):
+        theta, pmat, step, out = shmapped(
+            rff.omega, rff.bias, state.theta, state.pmat, state.step, xs, ys
+        )
+        return RLSState(theta=theta, pmat=pmat, step=step), out
+
+    return block_step_fn
+
+
 def make_sharded_krls_predict(
     mesh: Mesh, rff: RFF, axis: str = KRLS_SHARD_AXIS
 ):
@@ -293,32 +478,69 @@ def make_sharded_krls_predict(
 
 
 @functools.lru_cache(maxsize=None)
-def _sharded_krls_run_program(mesh: Mesh, axis: str, beta: float, dfull: int):
+def _sharded_krls_run_program(
+    mesh: Mesh, axis: str, beta: float, dfull: int, combine_every: int = 1
+):
     """Build (and cache) the jitted whole-stream program for one
-    (mesh, axis, beta, D) — repeat drivers re-use the compiled scan."""
+    (mesh, axis, beta, D, k) — repeat drivers re-use the compiled scan.
+
+    ``combine_every == 1`` scans per-tick ticks (one psum each);
+    ``combine_every == k`` scans k-tick blocks (one packed psum each) and
+    takes an extra replicated ``mask (nblocks, k)`` input for the
+    zero-padded final block.
+    """
     sspec = krls_state_specs(axis)
+    k = combine_every
 
-    def node(omega_l, bias_l, theta_l, pmat_l, step, xs, ys):
-        carry0 = _mark_varying((theta_l, pmat_l), axis)
+    if k == 1:
 
-        def body(carry, xy):
-            th, pm = carry
-            x, y = xy
-            th, pm, out = _sharded_rls_tick(
-                th, pm, omega_l, bias_l, x, y, beta, axis, dfull
+        def node(omega_l, bias_l, theta_l, pmat_l, step, xs, ys):
+            carry0 = _mark_varying((theta_l, pmat_l), axis)
+
+            def body(carry, xy):
+                th, pm = carry
+                x, y = xy
+                th, pm, out = _sharded_rls_tick(
+                    th, pm, omega_l, bias_l, x, y, beta, axis, dfull
+                )
+                return (th, pm), out
+
+            (theta_l, pmat_l), outs = jax.lax.scan(body, carry0, (xs, ys))
+            return theta_l, pmat_l, step + xs.shape[0], outs
+
+        in_specs = (
+            P(None, axis), P(axis), sspec.theta, sspec.pmat, sspec.step,
+            P(), P(),
+        )
+    else:
+
+        def node(omega_l, bias_l, theta_l, pmat_l, step, xs, ys, mask):
+            carry0 = _mark_varying((theta_l, pmat_l), axis)
+
+            def body(carry, xym):
+                th, pm = carry
+                xb, yb, mb = xym
+                th, pm, out = _sharded_rls_block_tick(
+                    th, pm, omega_l, bias_l, xb, yb, mb, beta, axis, dfull
+                )
+                return (th, pm), out
+
+            (theta_l, pmat_l), outs = jax.lax.scan(
+                body, carry0, (xs, ys, mask)
             )
-            return (th, pm), out
+            outs = jax.tree.map(lambda a: a.reshape(-1), outs)
+            ticks = jnp.sum(mask).astype(step.dtype)
+            return theta_l, pmat_l, step + ticks, outs
 
-        (theta_l, pmat_l), outs = jax.lax.scan(body, carry0, (xs, ys))
-        return theta_l, pmat_l, step + xs.shape[0], outs
+        in_specs = (
+            P(None, axis), P(axis), sspec.theta, sspec.pmat, sspec.step,
+            P(), P(), P(),
+        )
 
     shmapped = _shard_map(
         node,
         mesh=mesh,
-        in_specs=(
-            P(None, axis), P(axis), sspec.theta, sspec.pmat, sspec.step,
-            P(), P(),
-        ),
+        in_specs=in_specs,
         out_specs=(sspec.theta, sspec.pmat, sspec.step, P()),
     )
     return jax.jit(shmapped)
@@ -333,6 +555,7 @@ def sharded_krls_run(
     beta: float = 0.9995,
     state: RLSState | None = None,
     axis: str = KRLS_SHARD_AXIS,
+    combine_every: int = 1,
 ) -> tuple[RLSState, StepOut]:
     """Stream driver on the sharded layout: scan over time *inside* one
     shard_map, so the whole stream is a single program with one psum/tick.
@@ -340,14 +563,35 @@ def sharded_krls_run(
     ``xs (n, d)`` / ``ys (n,)`` are replicated (each tick is one global
     sample — the single-stream setting; the bank engine handles multi-tenant
     batches). Numerically equivalent to :func:`rff_krls_run` to ~1e-5.
+
+    ``combine_every=k`` batches k ticks per psum (the DCN deployment knob):
+    the stream is scanned in k-tick blocks through the packed-psum replay
+    of :func:`_sharded_rls_block_tick` (zero-masked final block for
+    ``n % k``). Exact modulo FP summation order — drift vs the per-tick
+    psum is bounded at 1e-5 f32 / 1e-8 f64 in tests.
     """
     if state is None:
         state = sharded_krls_init(
             mesh, rff.num_features, lam, rff.omega.dtype, axis
         )
     rff = shard_krls_rff(mesh, rff, axis)
-    program = _sharded_krls_run_program(mesh, axis, beta, rff.num_features)
-    theta, pmat, step, outs = program(
-        rff.omega, rff.bias, state.theta, state.pmat, state.step, xs, ys
+    program = _sharded_krls_run_program(
+        mesh, axis, beta, rff.num_features, combine_every
     )
+    if combine_every == 1:
+        theta, pmat, step, outs = program(
+            rff.omega, rff.bias, state.theta, state.pmat, state.step, xs, ys
+        )
+        return RLSState(theta=theta, pmat=pmat, step=step), outs
+
+    k = combine_every
+    n = xs.shape[0]
+    xs_b = time_blocks(xs, k)
+    ys_b = time_blocks(ys, k)
+    mask_b = valid_time_mask(n, k, xs.dtype)
+    theta, pmat, step, outs = program(
+        rff.omega, rff.bias, state.theta, state.pmat, state.step,
+        xs_b, ys_b, mask_b,
+    )
+    outs = jax.tree.map(lambda a: a[:n], outs)
     return RLSState(theta=theta, pmat=pmat, step=step), outs

@@ -20,7 +20,9 @@ from repro.kernels.ops import (
     rff_attention,
     rff_attention_decode,
     rff_features,
+    rff_klms_bank_chunk,
     rff_klms_bank_step,
+    rff_krls_bank_chunk,
     rff_krls_bank_step,
 )
 
@@ -29,7 +31,9 @@ __all__ = [
     "ref",
     "rff_features",
     "rff_klms_bank_step",
+    "rff_klms_bank_chunk",
     "rff_krls_bank_step",
+    "rff_krls_bank_chunk",
     "rff_attention",
     "rff_attention_decode",
     "flash_attention",

@@ -1,0 +1,46 @@
+"""Time-axis chunking utilities shared by every chunked run-loop.
+
+One place for the pad-to-multiple / reshape-into-blocks / masked-remainder
+bookkeeping so the kernel dispatchers (kernels/ops.py), the single-stream
+drivers (core/klms.py, core/krls.py) and the sharded combine_every driver
+(core/krls.py) can't drift apart on remainder handling.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["num_chunks", "time_blocks", "valid_time_mask", "unblock_time"]
+
+
+def num_chunks(n: int, chunk: int) -> int:
+    """ceil(n / chunk) — the scan length after chunking."""
+    return -(-n // chunk)
+
+
+def time_blocks(a: jax.Array, chunk: int, axis: int = 0) -> jax.Array:
+    """Zero-pad ``axis`` to a multiple of ``chunk`` and split it into a
+    leading scan axis: ``(..., n, ...) -> (nc, ..., chunk, ...)``."""
+    n = a.shape[axis]
+    nc = num_chunks(n, chunk)
+    widths = [(0, 0)] * a.ndim
+    widths[axis] = (0, nc * chunk - n)
+    ap = jnp.pad(a, widths)
+    ap = ap.reshape(a.shape[:axis] + (nc, chunk) + a.shape[axis + 1 :])
+    return jnp.moveaxis(ap, axis, 0)
+
+
+def valid_time_mask(n: int, chunk: int, dtype=jnp.float32) -> jax.Array:
+    """``(nc, chunk)`` gate: 1 for real ticks, 0 for the padded tail."""
+    nc = num_chunks(n, chunk)
+    return jnp.pad(jnp.ones((n,), dtype), (0, nc * chunk - n)).reshape(
+        nc, chunk,
+    )
+
+
+def unblock_time(a: jax.Array, n: int, axis: int = 0) -> jax.Array:
+    """Inverse of :func:`time_blocks` on stacked scan outputs:
+    ``(nc, ..., chunk, ...) -> (..., n, ...)`` with the padding sliced off."""
+    a = jnp.moveaxis(a, 0, axis)  # (..., nc, chunk, ...)
+    a = a.reshape(a.shape[:axis] + (-1,) + a.shape[axis + 2 :])
+    return jax.lax.slice_in_dim(a, 0, n, axis=axis)

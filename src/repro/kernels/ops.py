@@ -13,17 +13,26 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.chunking import time_blocks, unblock_time
 from repro.kernels.rff_features import rff_features_pallas
 from repro.kernels.rff_attention import rff_attention_pallas
-from repro.kernels.rff_klms_step import rff_klms_bank_step_pallas
-from repro.kernels.rff_krls_step import rff_krls_bank_step_pallas
+from repro.kernels.rff_klms_step import (
+    rff_klms_bank_chunk_pallas,
+    rff_klms_bank_step_pallas,
+)
+from repro.kernels.rff_krls_step import (
+    rff_krls_bank_chunk_pallas,
+    rff_krls_bank_step_pallas,
+)
 from repro.kernels.flash_attention import flash_attention_pallas
 
 __all__ = [
     "default_backend",
     "rff_features",
     "rff_klms_bank_step",
+    "rff_klms_bank_chunk",
     "rff_krls_bank_step",
+    "rff_krls_bank_chunk",
     "rff_attention",
     "rff_attention_decode",
     "flash_attention",
@@ -35,15 +44,20 @@ def default_backend() -> str:
 
 
 def _use_pallas(mode: str) -> tuple[bool, bool]:
-    """Resolve mode -> (use_pallas, interpret)."""
+    """Resolve mode -> (use_pallas, interpret).
+
+    ``fused`` / ``twopass`` are aliases for ``pallas`` / ``xla``: the fused
+    single-program path vs the two-pass reference (feature map and update as
+    separate passes with an HBM round-trip between them).
+    """
     if mode == "auto":
         on_tpu = default_backend() == "tpu"
         return on_tpu, False
-    if mode == "pallas":
+    if mode in ("pallas", "fused"):
         return True, default_backend() != "tpu"
     if mode == "interpret":
         return True, True
-    if mode == "xla":
+    if mode in ("xla", "twopass"):
         return False, False
     raise ValueError(f"unknown kernel mode {mode!r}")
 
@@ -99,6 +113,60 @@ def rff_klms_bank_step(
     )
 
 
+@functools.partial(jax.jit, static_argnames=("mode", "block_b", "chunk"))
+def rff_klms_bank_chunk(
+    theta: jax.Array,
+    xs: jax.Array,
+    ys: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    mu: jax.Array | float,
+    mask: jax.Array | None = None,
+    *,
+    mode: str = "auto",
+    block_b: int = 8,
+    chunk: int | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """T-chunked fused KLMS: advance a bank of B filters by T ticks at once.
+
+    theta (B, D), xs (B, T, d), ys (B, T), shared w (d, D) / b (D,), mu
+    scalar or (B,), mask optional (B, T) validity gate (1 = apply update).
+    ``chunk`` bounds the ticks per kernel launch: ``None`` runs all T in one
+    launch; ``chunk=k`` scans ceil(T/k) launches with a zero-masked final
+    remainder. Returns (theta_new, predictions (B, T), errors (B, T)).
+    """
+    use_pallas, interpret = _use_pallas(mode)
+    mu_arr = jnp.asarray(mu, theta.dtype)
+    bsz, tlen, _ = xs.shape
+    if mask is None:
+        mask = jnp.ones((bsz, tlen), theta.dtype)
+
+    def launch(th, xc, yc, mc):
+        if not use_pallas:
+            return ref.rff_klms_bank_chunk_ref(th, xc, yc, w, b, mu_arr, mc)
+        return rff_klms_bank_chunk_pallas(
+            th, xc, yc, w, b, mu_arr, mc, block_b=block_b, interpret=interpret
+        )
+
+    if chunk is None or tlen <= chunk:
+        return launch(theta, xs, ys, mask)
+
+    xs_c = time_blocks(xs, chunk, axis=1)
+    ys_c = time_blocks(ys, chunk, axis=1)
+    mask_c = time_blocks(mask.astype(theta.dtype), chunk, axis=1)
+
+    def body(th, xym):
+        th, preds, errs = launch(th, *xym)
+        return th, (preds, errs)
+
+    theta, (preds, errs) = jax.lax.scan(body, theta, (xs_c, ys_c, mask_c))
+    return (
+        theta,
+        unblock_time(preds, tlen, axis=1),
+        unblock_time(errs, tlen, axis=1),
+    )
+
+
 @functools.partial(jax.jit, static_argnames=("mode",))
 def rff_krls_bank_step(
     theta: jax.Array,
@@ -123,6 +191,65 @@ def rff_krls_bank_step(
     return rff_krls_bank_step_pallas(
         theta, pmat, x, y, w, b, jnp.asarray(beta, theta.dtype),
         interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "chunk"))
+def rff_krls_bank_chunk(
+    theta: jax.Array,
+    pmat: jax.Array,
+    xs: jax.Array,
+    ys: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    beta: jax.Array | float,
+    mask: jax.Array | None = None,
+    *,
+    mode: str = "auto",
+    chunk: int | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """T-chunked fused EW-RLS: advance a bank of B tenants by T ticks at once.
+
+    theta (B, D), pmat (B, D, D), xs (B, T, d), ys (B, T), shared w (d, D) /
+    b (D,), beta scalar or (B,), mask optional (B, T) validity gate.
+    ``chunk`` bounds ticks per launch as in :func:`rff_klms_bank_chunk`.
+    Returns (theta_new, pmat_new, predictions (B, T), errors (B, T)).
+    """
+    use_pallas, interpret = _use_pallas(mode)
+    beta_arr = jnp.asarray(beta, theta.dtype)
+    bsz, tlen, _ = xs.shape
+    if mask is None:
+        mask = jnp.ones((bsz, tlen), theta.dtype)
+
+    def launch(th, pm, xc, yc, mc):
+        if not use_pallas:
+            return ref.rff_krls_bank_chunk_ref(
+                th, pm, xc, yc, w, b, beta_arr, mc
+            )
+        return rff_krls_bank_chunk_pallas(
+            th, pm, xc, yc, w, b, beta_arr, mc, interpret=interpret
+        )
+
+    if chunk is None or tlen <= chunk:
+        return launch(theta, pmat, xs, ys, mask)
+
+    xs_c = time_blocks(xs, chunk, axis=1)
+    ys_c = time_blocks(ys, chunk, axis=1)
+    mask_c = time_blocks(mask.astype(theta.dtype), chunk, axis=1)
+
+    def body(carry, xym):
+        th, pm = carry
+        th, pm, preds, errs = launch(th, pm, *xym)
+        return (th, pm), (preds, errs)
+
+    (theta, pmat), (preds, errs) = jax.lax.scan(
+        body, (theta, pmat), (xs_c, ys_c, mask_c)
+    )
+    return (
+        theta,
+        pmat,
+        unblock_time(preds, tlen, axis=1),
+        unblock_time(errs, tlen, axis=1),
     )
 
 

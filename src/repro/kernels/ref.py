@@ -9,7 +9,9 @@ import jax.numpy as jnp
 __all__ = [
     "rff_features_ref",
     "rff_klms_bank_step_ref",
+    "rff_klms_bank_chunk_ref",
     "rff_krls_bank_step_ref",
+    "rff_krls_bank_chunk_ref",
     "rff_attention_ref",
     "rff_attention_state_ref",
     "flash_attention_ref",
@@ -35,6 +37,36 @@ def rff_klms_bank_step_ref(theta, x, y, w, b, mu):
     return theta + (mu * err)[:, None] * z, pred, err
 
 
+def rff_klms_bank_chunk_ref(theta, xs, ys, w, b, mu, mask=None):
+    """T-chunked KLMS oracle — for ``rff_klms_bank_chunk_pallas``.
+
+    A ``lax.scan`` of the per-tick recursion over the chunk's time axis:
+    theta (B, D), xs (B, T, d), ys (B, T), mask (B, T) validity gate
+    (1 = apply the update; masked ticks still emit their prior prediction).
+    With mask==1 every tick multiplies by exactly 1.0, so an unmasked chunk
+    is bitwise identical to T per-tick ``rff_klms_bank_step_ref`` calls.
+    """
+    import jax
+
+    if mask is None:
+        mask = jnp.ones(ys.shape, theta.dtype)
+    mu_b = jnp.broadcast_to(jnp.asarray(mu, theta.dtype), ys.shape[:1])
+
+    def tick(th, xym):
+        x_t, y_t, m_t = xym
+        z = rff_features_ref(x_t, w, b)  # (B, D)
+        pred = jnp.sum(th * z, axis=-1)
+        err = y_t - pred
+        th = th + (mu_b * (m_t * err))[:, None] * z
+        return th, (pred, err)
+
+    xs_t = jnp.swapaxes(xs, 0, 1)  # (T, B, d) time-major
+    ys_t = jnp.swapaxes(ys, 0, 1)
+    mask_t = jnp.swapaxes(mask.astype(theta.dtype), 0, 1)
+    theta, (preds, errs) = jax.lax.scan(tick, theta, (xs_t, ys_t, mask_t))
+    return theta, jnp.swapaxes(preds, 0, 1), jnp.swapaxes(errs, 0, 1)
+
+
 def rff_krls_bank_step_ref(theta, pmat, x, y, w, b, beta):
     """Two-pass fused-KRLS-step oracle — for kernels/rff_krls_step.py.
 
@@ -55,6 +87,38 @@ def rff_krls_bank_step_ref(theta, pmat, x, y, w, b, beta):
     pmat_new = (pmat - gain[:, :, None] * pz[:, None, :]) / beta[:, None, None]
     pmat_new = 0.5 * (pmat_new + jnp.swapaxes(pmat_new, -1, -2))
     return theta_new, pmat_new, pred, err
+
+
+def rff_krls_bank_chunk_ref(theta, pmat, xs, ys, w, b, beta, mask=None):
+    """T-chunked EW-RLS oracle — for ``rff_krls_bank_chunk_pallas``.
+
+    ``lax.scan`` of :func:`rff_krls_bank_step_ref` over the chunk's time
+    axis with a per-(tenant, tick) validity gate: masked ticks emit their
+    prior prediction but select the untouched theta/P (``jnp.where``), so
+    an unmasked chunk is bitwise T per-tick steps.
+    """
+    import jax
+
+    if mask is None:
+        mask = jnp.ones(ys.shape, theta.dtype)
+
+    def tick(carry, xym):
+        th, pm = carry
+        x_t, y_t, m_t = xym
+        th2, pm2, pred, err = rff_krls_bank_step_ref(
+            th, pm, x_t, y_t, w, b, beta
+        )
+        th = jnp.where(m_t[:, None] > 0, th2, th)
+        pm = jnp.where(m_t[:, None, None] > 0, pm2, pm)
+        return (th, pm), (pred, err)
+
+    xs_t = jnp.swapaxes(xs, 0, 1)  # (T, B, d) time-major
+    ys_t = jnp.swapaxes(ys, 0, 1)
+    mask_t = jnp.swapaxes(mask.astype(theta.dtype), 0, 1)
+    (theta, pmat), (preds, errs) = jax.lax.scan(
+        tick, (theta, pmat), (xs_t, ys_t, mask_t)
+    )
+    return theta, pmat, jnp.swapaxes(preds, 0, 1), jnp.swapaxes(errs, 0, 1)
 
 
 def rff_attention_ref(phi_q, phi_k, v, normalize=True, eps=1e-6):

@@ -39,10 +39,16 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.rff_features import _ceil_to, _pad2
 
-__all__ = ["rff_klms_step_kernel", "rff_klms_bank_step_pallas"]
+__all__ = [
+    "rff_klms_step_kernel",
+    "rff_klms_bank_step_pallas",
+    "rff_klms_chunk_kernel",
+    "rff_klms_bank_chunk_pallas",
+]
 
 
 def rff_klms_step_kernel(
@@ -133,3 +139,140 @@ def rff_klms_bank_step_pallas(
         interpret=interpret,
     )(x_p, w_p, b_p, theta_p, y_p, mu_p)
     return theta_new[:bsz, :dfeat], pred[:bsz, 0], err[:bsz, 0]
+
+
+# ---------------------------------------------------------------------------
+# Time-blocked (chunked) variant: T ticks per Pallas launch.
+#
+# The per-tick kernel above amortizes the feature round-trip but still pays
+# one launch + one HBM read/write of the full (B, D) theta *per tick*. The
+# chunk kernel runs a (bank_blocks, T) grid with T as the minor dimension
+# and carries theta in a VMEM *scratch* accumulator (the same device the
+# rff_features K-loop uses): seeded from HBM at t == 0, updated in place for
+# all T ticks of a bank block, written back once at t == T-1. Theta traffic
+# drops from 2*B*D*4 bytes/tick to 2*B*D*4/T, and W/b are still fetched once
+# per launch (d*D*4 / (B*T) bytes per tick).
+# ---------------------------------------------------------------------------
+
+
+def rff_klms_chunk_kernel(
+    x_ref, w_ref, b_ref, theta_ref, y_ref, mu_ref, mask_ref,
+    theta_out_ref, pred_ref, err_ref, acc_ref, *, scale: float, dfeat: int
+):
+    """Grid point (i, t): tick t for bank block i on the resident theta tile.
+
+    ``mask`` (0/1 per (filter, tick)) gates the update only — masked ticks
+    still emit their prior prediction/error but leave theta untouched. With
+    mask==1 the update expression multiplies by exactly 1.0, so an unmasked
+    chunk is bitwise identical to T per-tick kernel calls (f32 state).
+
+    Unlike the per-tick wrapper (which slices polluted padded columns off
+    after every call), the resident theta carries across ticks, so z's
+    padded-D columns (cos(0) garbage) must be zeroed in-kernel — otherwise
+    they'd feed back into the next tick's prediction.
+    """
+    t = pl.program_id(1)
+    nt = pl.num_programs(1)
+
+    @pl.when(t == 0)
+    def _seed():
+        acc_ref[...] = theta_ref[...].astype(jnp.float32)
+
+    proj = jnp.dot(
+        x_ref[:, 0, :].astype(jnp.float32),
+        w_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    ) + b_ref[...].astype(jnp.float32)
+    z = scale * jnp.cos(proj)  # (bb, D) — never leaves VMEM
+    if z.shape[1] > dfeat:  # static: zero padded-D columns (exact elsewhere)
+        col = jax.lax.broadcasted_iota(jnp.int32, z.shape, 1)
+        z = jnp.where(col < dfeat, z, 0.0)
+    theta = acc_ref[...]
+    pred = jnp.sum(theta * z, axis=1, keepdims=True)  # (bb, 1)
+    err = y_ref[...].astype(jnp.float32) - pred
+    gated = mask_ref[...].astype(jnp.float32) * err
+    acc_ref[...] = theta + mu_ref[...].astype(jnp.float32) * gated * z
+    pred_ref[...] = pred.astype(pred_ref.dtype)
+    err_ref[...] = err.astype(err_ref.dtype)
+
+    @pl.when(t == nt - 1)
+    def _writeback():
+        theta_out_ref[...] = acc_ref[...].astype(theta_out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_b", "interpret"))
+def rff_klms_bank_chunk_pallas(
+    theta: jax.Array,
+    xs: jax.Array,
+    ys: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    mu: jax.Array,
+    mask: jax.Array | None = None,
+    *,
+    block_b: int = 8,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """T-chunked fused KLMS: one launch advances every filter by T ticks.
+
+    Args:
+      theta: ``(B, D)`` per-filter solutions.
+      xs: ``(B, T, d)`` T samples per filter/stream.
+      ys: ``(B, T)`` targets.
+      w: ``(d, D)`` shared spectral matrix.
+      b: ``(D,)`` shared phases.
+      mu: scalar or ``(B,)`` per-filter step sizes.
+      mask: optional ``(B, T)`` validity gate (1 = apply the update); the
+        masked-remainder contract of the chunked run-loops and the serve
+        queue's ragged-arrival chunks.
+
+    Returns:
+      (theta_new ``(B, D)``, predictions ``(B, T)``, prior errors ``(B, T)``).
+    """
+    bsz, tlen, d = xs.shape
+    dfeat = theta.shape[-1]
+    assert theta.shape == (bsz, dfeat) and ys.shape == (bsz, tlen)
+    assert w.shape == (d, dfeat) and b.shape == (dfeat,)
+    scale = float((2.0 / dfeat) ** 0.5)  # true D, not padded
+
+    bb = min(block_b, _ceil_to(bsz, 8))
+    bp, dp, np_ = _ceil_to(bsz, bb), _ceil_to(d, 128), _ceil_to(dfeat, 128)
+
+    mu_col = jnp.broadcast_to(jnp.asarray(mu, theta.dtype), (bsz,))
+    if mask is None:
+        mask = jnp.ones((bsz, tlen), theta.dtype)
+    theta_p = _pad2(theta, bp, np_)
+    xs_p = jnp.pad(xs, ((0, bp - bsz), (0, 0), (0, dp - d)))
+    ys_p = jnp.pad(ys, ((0, bp - bsz), (0, 0)))
+    mask_p = jnp.pad(mask.astype(theta.dtype), ((0, bp - bsz), (0, 0)))
+    mu_p = jnp.pad(mu_col, (0, bp - bsz))[:, None]
+    w_p = _pad2(w, dp, np_)
+    b_p = jnp.pad(b, (0, np_ - dfeat))[None, :]  # (1, Np)
+
+    grid = (bp // bb, tlen)  # t minor: theta tile resident across the chunk
+    theta_new, pred, err = pl.pallas_call(
+        functools.partial(rff_klms_chunk_kernel, scale=scale, dfeat=dfeat),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, 1, dp), lambda i, t: (i, t, 0)),
+            pl.BlockSpec((dp, np_), lambda i, t: (0, 0)),  # grid-invariant W
+            pl.BlockSpec((1, np_), lambda i, t: (0, 0)),
+            pl.BlockSpec((bb, np_), lambda i, t: (i, 0)),
+            pl.BlockSpec((bb, 1), lambda i, t: (i, t)),
+            pl.BlockSpec((bb, 1), lambda i, t: (i, 0)),
+            pl.BlockSpec((bb, 1), lambda i, t: (i, t)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, np_), lambda i, t: (i, 0)),  # revisited over t
+            pl.BlockSpec((bb, 1), lambda i, t: (i, t)),
+            pl.BlockSpec((bb, 1), lambda i, t: (i, t)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp, np_), theta.dtype),
+            jax.ShapeDtypeStruct((bp, tlen), theta.dtype),
+            jax.ShapeDtypeStruct((bp, tlen), theta.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((bb, np_), jnp.float32)],
+        interpret=interpret,
+    )(xs_p, w_p, b_p, theta_p, ys_p, mu_p, mask_p)
+    return theta_new[:bsz, :dfeat], pred[:bsz], err[:bsz]

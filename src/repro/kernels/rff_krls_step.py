@@ -45,10 +45,16 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.rff_features import _ceil_to, _pad2
 
-__all__ = ["rff_krls_step_kernel", "rff_krls_bank_step_pallas"]
+__all__ = [
+    "rff_krls_step_kernel",
+    "rff_krls_bank_step_pallas",
+    "rff_krls_chunk_kernel",
+    "rff_krls_bank_chunk_pallas",
+]
 
 
 def rff_krls_step_kernel(
@@ -169,4 +175,161 @@ def rff_krls_bank_step_pallas(
         p_new[:, :dfeat, :dfeat],
         pred[:, 0],
         err[:, 0],
+    )
+
+
+# ---------------------------------------------------------------------------
+# Time-blocked (chunked) variant: T RLS ticks per Pallas launch.
+#
+# The dominant HBM cost of the per-tick kernel is the (D, D) P tile: one
+# read + one write per tick (8*D^2 bytes at f32 — 8 MiB/tick at D=1024).
+# The chunk kernel runs a (B, T) grid with T minor and carries each tenant's
+# theta/P in VMEM *scratch* accumulators (the rff_features K-loop device):
+# seeded from HBM at t == 0, downdated in place for all T ticks, written
+# back once at t == T-1 — P traffic per tick drops by the full factor T,
+# which is exactly the paper's fixed-size-state dividend (no dictionary
+# growth means the T-step replay needs zero extra bookkeeping).
+# ---------------------------------------------------------------------------
+
+
+def rff_krls_chunk_kernel(
+    x_ref, w_ref, b_ref, theta_ref, p_ref, y_ref, beta_ref, mask_ref,
+    theta_out_ref, p_out_ref, pred_ref, err_ref, th_acc, p_acc,
+    *, scale: float
+):
+    """Grid point (i, t): tick t for tenant i on the resident theta/P tiles.
+
+    ``mask`` gates the state update only (masked ticks emit predictions but
+    change nothing); with mask==1 each tick is the per-tick kernel verbatim.
+    """
+    f32 = jnp.float32
+    t = pl.program_id(1)
+    nt = pl.num_programs(1)
+
+    @pl.when(t == 0)
+    def _seed():
+        th_acc[...] = theta_ref[...].astype(f32)
+        p_acc[...] = p_ref[0].astype(f32)
+
+    proj = jnp.dot(
+        x_ref[:, 0, :].astype(f32),
+        w_ref[...].astype(f32),
+        preferred_element_type=f32,
+    ) + b_ref[...].astype(f32)
+    z = scale * jnp.cos(proj)  # (1, D) — never leaves VMEM
+    theta = th_acc[...]  # (1, D)
+    pred = jnp.sum(theta * z, axis=1, keepdims=True)  # (1, 1)
+    err = y_ref[...].astype(f32) - pred
+    beta = beta_ref[...].astype(f32)  # (1, 1)
+    m = mask_ref[...].astype(f32)  # (1, 1)
+
+    p = p_acc[...]  # (D, D) — resident across the chunk
+    pz = jax.lax.dot_general(
+        z, p, (((1,), (1,)), ((), ())), preferred_element_type=f32
+    )  # (1, D)
+    denom = beta + jnp.sum(z * pz, axis=1, keepdims=True)  # (1, 1)
+    gain = pz / denom  # (1, D)
+    th_acc[...] = theta + gain * (m * err)
+
+    outer = jax.lax.dot_general(
+        gain, pz, (((0,), (0,)), ((), ())), preferred_element_type=f32
+    )  # (D, D)
+    p_new = (p - outer) / beta
+    p_new = 0.5 * (p_new + p_new.T)
+    p_acc[...] = jnp.where(m[0, 0] > 0, p_new, p)
+    pred_ref[...] = pred.astype(pred_ref.dtype)
+    err_ref[...] = err.astype(err_ref.dtype)
+
+    @pl.when(t == nt - 1)
+    def _writeback():
+        theta_out_ref[...] = th_acc[...].astype(theta_out_ref.dtype)
+        p_out_ref[0] = p_acc[...].astype(p_out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def rff_krls_bank_chunk_pallas(
+    theta: jax.Array,
+    pmat: jax.Array,
+    xs: jax.Array,
+    ys: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    beta: jax.Array,
+    mask: jax.Array | None = None,
+    *,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """T-chunked fused EW-RLS: one launch advances every tenant by T ticks.
+
+    Args:
+      theta: ``(B, D)`` per-tenant solutions.
+      pmat: ``(B, D, D)`` per-tenant inverse-correlation estimates.
+      xs: ``(B, T, d)`` T samples per tenant/stream.
+      ys: ``(B, T)`` targets.
+      w: ``(d, D)`` shared spectral matrix.
+      b: ``(D,)`` shared phases.
+      beta: scalar or ``(B,)`` per-tenant forgetting factors.
+      mask: optional ``(B, T)`` validity gate (1 = apply the update).
+
+    Returns:
+      (theta_new ``(B, D)``, pmat_new ``(B, D, D)``, predictions ``(B, T)``,
+      prior errors ``(B, T)``).
+    """
+    bsz, tlen, d = xs.shape
+    dfeat = theta.shape[-1]
+    assert theta.shape == (bsz, dfeat)
+    assert pmat.shape == (bsz, dfeat, dfeat) and ys.shape == (bsz, tlen)
+    assert w.shape == (d, dfeat) and b.shape == (dfeat,)
+    scale = float((2.0 / dfeat) ** 0.5)  # true D, not padded
+
+    dp, np_ = _ceil_to(d, 128), _ceil_to(dfeat, 128)
+    beta_col = jnp.broadcast_to(jnp.asarray(beta, theta.dtype), (bsz,))
+    if mask is None:
+        mask = jnp.ones((bsz, tlen), theta.dtype)
+
+    theta_p = _pad2(theta, bsz, np_)
+    p_p = jnp.pad(pmat, ((0, 0), (0, np_ - dfeat), (0, np_ - dfeat)))
+    xs_p = jnp.pad(xs, ((0, 0), (0, 0), (0, dp - d)))
+    beta_p = beta_col[:, None]
+    mask_p = mask.astype(theta.dtype)
+    w_p = _pad2(w, dp, np_)
+    b_p = jnp.pad(b, (0, np_ - dfeat))[None, :]  # (1, Np)
+
+    grid = (bsz, tlen)  # t minor: theta/P tiles resident across the chunk
+    theta_new, p_new, pred, err = pl.pallas_call(
+        functools.partial(rff_krls_chunk_kernel, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, dp), lambda i, t: (i, t, 0)),
+            pl.BlockSpec((dp, np_), lambda i, t: (0, 0)),  # grid-invariant W
+            pl.BlockSpec((1, np_), lambda i, t: (0, 0)),
+            pl.BlockSpec((1, np_), lambda i, t: (i, 0)),
+            pl.BlockSpec((1, np_, np_), lambda i, t: (i, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i, t: (i, t)),
+            pl.BlockSpec((1, 1), lambda i, t: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, t: (i, t)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, np_), lambda i, t: (i, 0)),  # revisited over t
+            pl.BlockSpec((1, np_, np_), lambda i, t: (i, 0, 0)),
+            pl.BlockSpec((1, 1), lambda i, t: (i, t)),
+            pl.BlockSpec((1, 1), lambda i, t: (i, t)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, np_), theta.dtype),
+            jax.ShapeDtypeStruct((bsz, np_, np_), pmat.dtype),
+            jax.ShapeDtypeStruct((bsz, tlen), theta.dtype),
+            jax.ShapeDtypeStruct((bsz, tlen), theta.dtype),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((1, np_), jnp.float32),
+            pltpu.VMEM((np_, np_), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xs_p, w_p, b_p, theta_p, p_p, ys, beta_p, mask_p)
+    return (
+        theta_new[:, :dfeat],
+        p_new[:, :dfeat, :dfeat],
+        pred,
+        err,
     )

@@ -7,6 +7,13 @@ from repro.serve.bank_loop import (
     serve_bank_stream,
     serve_krls_bank_stream,
 )
+from repro.serve.queue import (
+    MicroBatchQueue,
+    klms_micro_batch_queue,
+    krls_micro_batch_queue,
+    make_chunked_bank_server,
+    make_chunked_krls_bank_server,
+)
 
 __all__ = [
     "generate",
@@ -17,4 +24,9 @@ __all__ = [
     "make_krls_bank_server",
     "serve_krls_bank_stream",
     "reset_krls_tenants",
+    "MicroBatchQueue",
+    "make_chunked_bank_server",
+    "make_chunked_krls_bank_server",
+    "klms_micro_batch_queue",
+    "krls_micro_batch_queue",
 ]

@@ -60,7 +60,7 @@ def make_bank_server(
     return tick
 
 
-@functools.partial(jax.jit, static_argnames=("mode",))
+@functools.partial(jax.jit, static_argnames=("mode", "chunk"))
 def serve_bank_stream(
     rff: RFF,
     xs: jax.Array,
@@ -68,9 +68,14 @@ def serve_bank_stream(
     mu: Union[float, jax.Array],
     state: Optional[LMSState] = None,
     mode: str = "auto",
+    chunk: Optional[int] = None,
 ) -> tuple[LMSState, StepOut]:
-    """Serve B tenant streams ``xs (B, n, d)``, ``ys (B, n)`` in one jit."""
-    return klms_bank_run(rff, xs, ys, mu, state=state, mode=mode)
+    """Serve B tenant streams ``xs (B, n, d)``, ``ys (B, n)`` in one jit.
+
+    ``chunk=T`` drives the time-blocked kernel schedule (one launch per T
+    ticks) instead of the per-tick scan — same trajectory, fewer dispatches.
+    """
+    return klms_bank_run(rff, xs, ys, mu, state=state, mode=mode, chunk=chunk)
 
 
 def reset_tenants(state: LMSState, slots: jax.Array) -> LMSState:
@@ -97,7 +102,7 @@ def make_krls_bank_server(
     return tick
 
 
-@functools.partial(jax.jit, static_argnames=("mode",))
+@functools.partial(jax.jit, static_argnames=("mode", "chunk"))
 def serve_krls_bank_stream(
     rff: RFF,
     xs: jax.Array,
@@ -106,9 +111,16 @@ def serve_krls_bank_stream(
     beta: Union[float, jax.Array] = 0.9995,
     state: Optional[RLSState] = None,
     mode: str = "auto",
+    chunk: Optional[int] = None,
 ) -> tuple[RLSState, StepOut]:
-    """Serve B KRLS tenant streams ``xs (B, n, d)``, ``ys (B, n)``."""
-    return krls_bank_run(rff, xs, ys, lam=lam, beta=beta, state=state, mode=mode)
+    """Serve B KRLS tenant streams ``xs (B, n, d)``, ``ys (B, n)``.
+
+    ``chunk=T`` selects the time-blocked kernel schedule (see
+    :func:`serve_bank_stream`).
+    """
+    return krls_bank_run(
+        rff, xs, ys, lam=lam, beta=beta, state=state, mode=mode, chunk=chunk
+    )
 
 
 def reset_krls_tenants(

@@ -1,0 +1,194 @@
+"""Micro-batching serve queue: ragged tenant arrivals -> masked (B, T) chunks.
+
+The lockstep servers in serve/bank_loop.py assume every tenant delivers
+exactly one observation per tick — real traffic doesn't. This module is the
+ROADMAP "async serving over the filter bank" item, landed as the natural
+consumer of the chunked kernels: arrivals are enqueued per tenant at any
+rate, and each ``flush()`` coalesces up to ``chunk`` pending observations
+per tenant into ONE time-blocked kernel launch — a ``(B, T, d)`` batch with
+a per-(tenant, tick) validity mask covering both idle tenants (empty rows)
+and short backlogs (partial rows).
+
+Why this is safe: the paper's fixed-size state means a tenant that missed k
+flushes needs no catch-up bookkeeping — its next chunk simply replays its
+queued samples in arrival order, and masked slots are proven no-ops
+(tests/test_chunked.py). Per-flush cost is one dispatch for the whole bank
+instead of ``sum(backlog)`` per-tick dispatches; the dispatch-amortization
+math is in README "Throughput model".
+
+The queue is deliberately host-side and synchronous (submit/flush), so it
+composes with any outer event loop; it owns the jitted chunk step and the
+bank state, and always launches the same ``(B, chunk)`` shape so the step
+traces exactly once.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Callable, Union
+
+import jax
+import numpy as np
+
+from repro.core.bank import (
+    klms_bank_chunk_step,
+    klms_bank_init,
+    krls_bank_chunk_step,
+    krls_bank_init,
+)
+from repro.core.rff import RFF
+
+__all__ = [
+    "MicroBatchQueue",
+    "make_chunked_bank_server",
+    "make_chunked_krls_bank_server",
+    "klms_micro_batch_queue",
+    "krls_micro_batch_queue",
+]
+
+
+def make_chunked_bank_server(
+    rff: RFF,
+    mu: Union[float, jax.Array],
+    mode: str = "auto",
+) -> Callable:
+    """Jitted chunked KLMS server: ``(state, xs (B, T, d), ys (B, T),
+    mask (B, T)) -> (state, StepOut (B, T))`` — one launch per chunk."""
+
+    @jax.jit
+    def tick(state, xs, ys, mask):
+        return klms_bank_chunk_step(state, xs, ys, rff, mu, mask, mode=mode)
+
+    return tick
+
+
+def make_chunked_krls_bank_server(
+    rff: RFF,
+    beta: Union[float, jax.Array] = 0.9995,
+    mode: str = "auto",
+) -> Callable:
+    """Jitted chunked KRLS server: same contract as
+    :func:`make_chunked_bank_server` over ``(theta, P)`` tenant state."""
+
+    @jax.jit
+    def tick(state, xs, ys, mask):
+        return krls_bank_chunk_step(state, xs, ys, rff, beta, mask, mode=mode)
+
+    return tick
+
+
+class MicroBatchQueue:
+    """Coalesce ragged per-tenant arrivals into masked ``(B, T)`` chunks.
+
+    Args:
+      chunk_step: jitted ``(state, xs, ys, mask) -> (state, StepOut)`` —
+        from :func:`make_chunked_bank_server` or the KRLS variant.
+      state: initial bank state (owned and advanced by the queue).
+      input_dim: ``d`` of the feature space.
+      chunk: T — the fixed time-block every flush launches (constant shape,
+        so the server compiles exactly once).
+
+    ``submit`` enqueues one observation; ``flush`` processes up to T queued
+    observations per tenant in arrival order and returns
+    ``{tenant: [(prediction, prior_error), ...]}`` for what it consumed;
+    ``drain`` flushes until every backlog is empty.
+    """
+
+    def __init__(self, chunk_step: Callable, state, input_dim: int,
+                 chunk: int = 16):
+        self._chunk_step = chunk_step
+        self.state = state
+        self.input_dim = input_dim
+        self.chunk = chunk
+        lead = jax.tree.leaves(state)[0]
+        self.num_tenants = int(lead.shape[0])
+        # Buffers take the bank's working precision (f64 banks under x64
+        # must not round-trip observations through f32).
+        self._dtype = np.dtype(lead.dtype)
+        self._pending = [deque() for _ in range(self.num_tenants)]
+        self.ticks_served = 0
+        self.flushes = 0
+
+    def submit(self, tenant: int, x, y) -> None:
+        """Enqueue one ``(x, y)`` observation for ``tenant``."""
+        self._pending[tenant].append(
+            (np.asarray(x, self._dtype), self._dtype.type(y)),
+        )
+
+    def backlog(self) -> list[int]:
+        """Pending observation count per tenant."""
+        return [len(q) for q in self._pending]
+
+    def flush(self) -> dict[int, list[tuple[float, float]]]:
+        """One chunked launch over up to T queued ticks per tenant."""
+        bsz, tlen, d = self.num_tenants, self.chunk, self.input_dim
+        if not any(self._pending):
+            return {}
+        xs = np.zeros((bsz, tlen, d), self._dtype)
+        ys = np.zeros((bsz, tlen), self._dtype)
+        mask = np.zeros((bsz, tlen), self._dtype)
+        counts = []
+        for b, q in enumerate(self._pending):
+            take = min(len(q), tlen)
+            for t in range(take):
+                x, y = q.popleft()
+                xs[b, t] = x
+                ys[b, t] = y
+                mask[b, t] = 1.0
+            counts.append(take)
+        self.state, out = self._chunk_step(self.state, xs, ys, mask)
+        preds = np.asarray(out.prediction)
+        errs = np.asarray(out.error)
+        self.flushes += 1
+        self.ticks_served += sum(counts)
+        return {
+            b: [(float(preds[b, t]), float(errs[b, t])) for t in range(c)]
+            for b, c in enumerate(counts)
+            if c
+        }
+
+    def drain(self) -> dict[int, list[tuple[float, float]]]:
+        """Flush until all backlogs are empty; merge per-tenant results."""
+        merged: dict[int, list[tuple[float, float]]] = {}
+        while any(self._pending):
+            for b, res in self.flush().items():
+                merged.setdefault(b, []).extend(res)
+        return merged
+
+
+def klms_micro_batch_queue(
+    rff: RFF,
+    num_tenants: int,
+    mu: Union[float, jax.Array] = 0.5,
+    chunk: int = 16,
+    mode: str = "auto",
+    state=None,
+) -> MicroBatchQueue:
+    """Ready-to-serve KLMS queue: fresh bank state + jitted chunk server."""
+    if state is None:
+        state = klms_bank_init(rff, num_tenants)
+    return MicroBatchQueue(
+        make_chunked_bank_server(rff, mu, mode=mode),
+        state,
+        rff.input_dim,
+        chunk=chunk,
+    )
+
+
+def krls_micro_batch_queue(
+    rff: RFF,
+    num_tenants: int,
+    lam: Union[float, jax.Array] = 1e-4,
+    beta: Union[float, jax.Array] = 0.9995,
+    chunk: int = 16,
+    mode: str = "auto",
+    state=None,
+) -> MicroBatchQueue:
+    """Ready-to-serve KRLS queue: fresh bank state + jitted chunk server."""
+    if state is None:
+        state = krls_bank_init(rff, num_tenants, lam)
+    return MicroBatchQueue(
+        make_chunked_krls_bank_server(rff, beta, mode=mode),
+        state,
+        rff.input_dim,
+        chunk=chunk,
+    )
