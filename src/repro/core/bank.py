@@ -33,16 +33,23 @@ and benchmarks drive.
 """
 from __future__ import annotations
 
-from typing import Callable, NamedTuple, Optional, Union
+from typing import Callable, NamedTuple, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.klms import LMSState, StepOut, rff_klms_init
-from repro.core.krls import RLSState, rff_krls_init
+from repro.core.klms import LMSState, StepOut, rff_klms_init, rff_klms_step
+from repro.core.krls import RLSState, rff_krls_init, rff_krls_step
 from repro.core.learner import OnlineLearner
-from repro.core.rff import RFF
-from repro.kernels import ops
+from repro.features.base import (
+    FeatureLike,
+    TrigFeatures,
+    as_trig,
+    as_trig_or_none,
+    feature_dtype,
+    featurize,
+)
+from repro.kernels import ops, ref
 
 __all__ = [
     "bank_init",
@@ -62,6 +69,9 @@ __all__ = [
     "krls_bank_step",
     "krls_bank_chunk_step",
     "krls_bank_run",
+    "stack_feature_maps",
+    "mixed_klms_bank_run",
+    "mixed_krls_bank_run",
 ]
 
 
@@ -177,14 +187,28 @@ def hp_bank_run(
 
 # ---------------------------------------------------------------------------
 # Fused KLMS bank — shared feature map, Pallas hot path.
+#
+# The feature map may be ANY repro.features family. Trig-canonical families
+# (rff / orf / qmc / gq) dispatch to the fused Pallas kernels with their
+# (W, b, scale) form; non-trig families (taylor) fall back to a generic
+# two-pass XLA step over ``featurize`` with identical update math, so the
+# bank tiers accept every family behind one signature.
 # ---------------------------------------------------------------------------
 
 
+def _generic_klms_tick(fm, theta, xs, ys, mu):
+    """Two-pass KLMS bank tick over ``featurize`` — delegates the update
+    to the oracle's ``ref.klms_tick_math`` (single source of truth)."""
+    z = featurize(fm, xs)  # (B, D)
+    mu_b = jnp.broadcast_to(jnp.asarray(mu, theta.dtype), ys.shape)
+    return ref.klms_tick_math(theta, z, ys, mu_b)
+
+
 def klms_bank_init(
-    rff: RFF, size: int, dtype: Optional[jnp.dtype] = None
+    rff: FeatureLike, size: int, dtype: Optional[jnp.dtype] = None
 ) -> LMSState:
     """Batched ``LMSState`` with ``theta (B, D)`` for the fused path."""
-    single = rff_klms_init(rff.num_features, dtype or rff.omega.dtype)
+    single = rff_klms_init(rff.num_features, dtype or feature_dtype(rff))
     return jax.tree.map(
         lambda a: jnp.broadcast_to(a, (size,) + a.shape), single
     )
@@ -194,25 +218,50 @@ def klms_bank_step(
     state: LMSState,
     xs: jax.Array,
     ys: jax.Array,
-    rff: RFF,
+    rff: FeatureLike,
     mu: Union[float, jax.Array],
     mode: str = "auto",
 ) -> tuple[LMSState, StepOut]:
     """One fused tick for the whole bank: ``xs (B, d)``, ``ys (B,)``."""
-    theta, pred, err = ops.rff_klms_bank_step(
-        state.theta, xs, ys, rff.omega, rff.bias, mu, mode=mode
-    )
+    tf = as_trig_or_none(rff)
+    if tf is None:
+        theta, pred, err = _generic_klms_tick(rff, state.theta, xs, ys, mu)
+    else:
+        theta, pred, err = ops.rff_klms_bank_step(
+            state.theta, xs, ys, tf.omega, tf.bias, mu, tf.scale, mode=mode
+        )
     return (
         LMSState(theta=theta, step=state.step + 1),
         StepOut(prediction=pred, error=err),
     )
 
 
+def _generic_klms_chunk(fm, theta, xs, ys, mu, mask):
+    """Masked T-tick scan of the two-pass KLMS recursion over ``featurize``
+    (non-trig chunk path; mirrors ``ref.rff_klms_bank_chunk_ref``): masked
+    ticks emit their prior prediction/error but leave theta untouched."""
+    if mask is None:
+        mask = jnp.ones(ys.shape, theta.dtype)
+    mu_b = jnp.broadcast_to(jnp.asarray(mu, theta.dtype), ys.shape[:1])
+
+    def tick(th, xym):
+        x_t, y_t, m_t = xym
+        z = featurize(fm, x_t)  # (B, D)
+        th, pred, err = ref.klms_tick_math(th, z, y_t, mu_b, gate=m_t)
+        return th, (pred, err)
+
+    xs_t = jnp.swapaxes(xs, 0, 1)
+    ys_t = jnp.swapaxes(ys, 0, 1)
+    mask_t = jnp.swapaxes(mask.astype(theta.dtype), 0, 1)
+    theta, (preds, errs) = jax.lax.scan(tick, theta, (xs_t, ys_t, mask_t))
+    return theta, jnp.swapaxes(preds, 0, 1), jnp.swapaxes(errs, 0, 1)
+
+
 def klms_bank_chunk_step(
     state: LMSState,
     xs: jax.Array,
     ys: jax.Array,
-    rff: RFF,
+    rff: FeatureLike,
     mu: Union[float, jax.Array],
     mask: Optional[jax.Array] = None,
     mode: str = "auto",
@@ -220,9 +269,16 @@ def klms_bank_chunk_step(
     """T ticks for the whole bank in one launch: ``xs (B, T, d)``,
     ``ys (B, T)``, optional ``mask (B, T)`` validity gate (the serve
     queue's ragged-arrival chunks). Masked ticks don't advance ``step``."""
-    theta, pred, err = ops.rff_klms_bank_chunk(
-        state.theta, xs, ys, rff.omega, rff.bias, mu, mask, mode=mode
-    )
+    tf = as_trig_or_none(rff)
+    if tf is None:
+        theta, pred, err = _generic_klms_chunk(
+            rff, state.theta, xs, ys, mu, mask
+        )
+    else:
+        theta, pred, err = ops.rff_klms_bank_chunk(
+            state.theta, xs, ys, tf.omega, tf.bias, mu, mask, tf.scale,
+            mode=mode,
+        )
     ticks = (
         ys.shape[1]
         if mask is None
@@ -235,7 +291,7 @@ def klms_bank_chunk_step(
 
 
 def klms_bank_run(
-    rff: RFF,
+    rff: FeatureLike,
     xs: jax.Array,
     ys: jax.Array,
     mu: Union[float, jax.Array],
@@ -256,17 +312,28 @@ def klms_bank_run(
     """
     if state is None:
         state = klms_bank_init(rff, xs.shape[0])
+    # Canonicalize ONCE at entry: building the trig form inside the scan
+    # body would embed the scale as an XLA constant, which folds/fuses
+    # differently from the traced argument the chunk branch passes — and
+    # the chunk-vs-tick bitwise contract forbids that divergence.
+    tf = as_trig_or_none(rff)
+    fm = rff if tf is None else tf
     if chunk is not None:
-        theta, pred, err = ops.rff_klms_bank_chunk(
-            state.theta, xs, ys, rff.omega, rff.bias, mu,
-            mode=mode, chunk=chunk,
-        )
+        if tf is None:
+            theta, pred, err = _generic_klms_chunk(
+                fm, state.theta, xs, ys, mu, None
+            )
+        else:
+            theta, pred, err = ops.rff_klms_bank_chunk(
+                state.theta, xs, ys, tf.omega, tf.bias, mu, None, tf.scale,
+                mode=mode, chunk=chunk,
+            )
         state = LMSState(theta=theta, step=state.step + ys.shape[1])
         return state, StepOut(prediction=pred, error=err)
 
     def body(s, xy):
         x_t, y_t = xy
-        return klms_bank_step(s, x_t, y_t, rff, mu, mode=mode)
+        return klms_bank_step(s, x_t, y_t, fm, mu, mode=mode)
 
     xs_t = jnp.swapaxes(xs, 0, 1)
     ys_t = jnp.swapaxes(ys, 0, 1)
@@ -281,7 +348,7 @@ def klms_bank_run(
 
 
 def krls_bank_init(
-    rff: RFF,
+    rff: FeatureLike,
     size: int,
     lam: Union[float, jax.Array] = 1e-4,
     dtype: Optional[jnp.dtype] = None,
@@ -292,7 +359,7 @@ def krls_bank_init(
     bank sweeps ``P_0 = I/lam`` alongside per-tenant ``beta`` (the ROADMAP
     per-tenant-hyperparams item for the KRLS family).
     """
-    dt = dtype or rff.omega.dtype
+    dt = dtype or feature_dtype(rff)
     single = rff_krls_init(rff.num_features, 1.0, dt)
     state = jax.tree.map(
         lambda a: jnp.broadcast_to(a, (size,) + a.shape), single
@@ -305,18 +372,56 @@ def krls_bank_init(
     )
 
 
+def _generic_krls_tick(fm, theta, pmat, xs, ys, beta):
+    """Two-pass EW-RLS bank tick over ``featurize`` — delegates the full
+    downdate (incl. symmetrization) to ``ref.krls_tick_math``."""
+    z = featurize(fm, xs)  # (B, D)
+    beta_b = jnp.broadcast_to(jnp.asarray(beta, theta.dtype), ys.shape)
+    return ref.krls_tick_math(theta, pmat, z, ys, beta_b)
+
+
+def _generic_krls_chunk(fm, theta, pmat, xs, ys, beta, mask):
+    """Masked T-tick scan of :func:`_generic_krls_tick` (non-trig chunk
+    path; mirrors ``ref.rff_krls_bank_chunk_ref``)."""
+    if mask is None:
+        mask = jnp.ones(ys.shape, theta.dtype)
+
+    def tick(carry, xym):
+        th, pm = carry
+        x_t, y_t, m_t = xym
+        th2, pm2, pred, err = _generic_krls_tick(fm, th, pm, x_t, y_t, beta)
+        th = jnp.where(m_t[:, None] > 0, th2, th)
+        pm = jnp.where(m_t[:, None, None] > 0, pm2, pm)
+        return (th, pm), (pred, err)
+
+    xs_t = jnp.swapaxes(xs, 0, 1)
+    ys_t = jnp.swapaxes(ys, 0, 1)
+    mask_t = jnp.swapaxes(mask.astype(theta.dtype), 0, 1)
+    (theta, pmat), (preds, errs) = jax.lax.scan(
+        tick, (theta, pmat), (xs_t, ys_t, mask_t)
+    )
+    return theta, pmat, jnp.swapaxes(preds, 0, 1), jnp.swapaxes(errs, 0, 1)
+
+
 def krls_bank_step(
     state: RLSState,
     xs: jax.Array,
     ys: jax.Array,
-    rff: RFF,
+    rff: FeatureLike,
     beta: Union[float, jax.Array] = 0.9995,
     mode: str = "auto",
 ) -> tuple[RLSState, StepOut]:
     """One fused RLS tick for the whole bank: ``xs (B, d)``, ``ys (B,)``."""
-    theta, pmat, pred, err = ops.rff_krls_bank_step(
-        state.theta, state.pmat, xs, ys, rff.omega, rff.bias, beta, mode=mode
-    )
+    tf = as_trig_or_none(rff)
+    if tf is None:
+        theta, pmat, pred, err = _generic_krls_tick(
+            rff, state.theta, state.pmat, xs, ys, beta
+        )
+    else:
+        theta, pmat, pred, err = ops.rff_krls_bank_step(
+            state.theta, state.pmat, xs, ys, tf.omega, tf.bias, beta,
+            tf.scale, mode=mode,
+        )
     return (
         RLSState(theta=theta, pmat=pmat, step=state.step + 1),
         StepOut(prediction=pred, error=err),
@@ -327,7 +432,7 @@ def krls_bank_chunk_step(
     state: RLSState,
     xs: jax.Array,
     ys: jax.Array,
-    rff: RFF,
+    rff: FeatureLike,
     beta: Union[float, jax.Array] = 0.9995,
     mask: Optional[jax.Array] = None,
     mode: str = "auto",
@@ -335,10 +440,16 @@ def krls_bank_chunk_step(
     """T RLS ticks for the whole bank in one launch: ``xs (B, T, d)``,
     ``ys (B, T)``, optional ``mask (B, T)`` validity gate. Masked ticks
     don't advance ``step`` and leave theta/P untouched."""
-    theta, pmat, pred, err = ops.rff_krls_bank_chunk(
-        state.theta, state.pmat, xs, ys, rff.omega, rff.bias, beta, mask,
-        mode=mode,
-    )
+    tf = as_trig_or_none(rff)
+    if tf is None:
+        theta, pmat, pred, err = _generic_krls_chunk(
+            rff, state.theta, state.pmat, xs, ys, beta, mask
+        )
+    else:
+        theta, pmat, pred, err = ops.rff_krls_bank_chunk(
+            state.theta, state.pmat, xs, ys, tf.omega, tf.bias, beta, mask,
+            tf.scale, mode=mode,
+        )
     ticks = (
         ys.shape[1]
         if mask is None
@@ -351,7 +462,7 @@ def krls_bank_chunk_step(
 
 
 def krls_bank_run(
-    rff: RFF,
+    rff: FeatureLike,
     xs: jax.Array,
     ys: jax.Array,
     lam: Union[float, jax.Array] = 1e-4,
@@ -374,11 +485,20 @@ def krls_bank_run(
     """
     if state is None:
         state = krls_bank_init(rff, xs.shape[0], lam)
+    # Canonicalize once at entry — see klms_bank_run for the bitwise
+    # rationale (constant-embedded vs traced scale).
+    tf = as_trig_or_none(rff)
+    fm = rff if tf is None else tf
     if chunk is not None:
-        theta, pmat, pred, err = ops.rff_krls_bank_chunk(
-            state.theta, state.pmat, xs, ys, rff.omega, rff.bias, beta,
-            mode=mode, chunk=chunk,
-        )
+        if tf is None:
+            theta, pmat, pred, err = _generic_krls_chunk(
+                fm, state.theta, state.pmat, xs, ys, beta, None
+            )
+        else:
+            theta, pmat, pred, err = ops.rff_krls_bank_chunk(
+                state.theta, state.pmat, xs, ys, tf.omega, tf.bias, beta,
+                None, tf.scale, mode=mode, chunk=chunk,
+            )
         state = RLSState(
             theta=theta, pmat=pmat, step=state.step + ys.shape[1]
         )
@@ -386,9 +506,123 @@ def krls_bank_run(
 
     def body(s, xy):
         x_t, y_t = xy
-        return krls_bank_step(s, x_t, y_t, rff, beta, mode=mode)
+        return krls_bank_step(s, x_t, y_t, fm, beta, mode=mode)
 
     xs_t = jnp.swapaxes(xs, 0, 1)
+    ys_t = jnp.swapaxes(ys, 0, 1)
+    state, outs = jax.lax.scan(body, state, (xs_t, ys_t))
+    return state, jax.tree.map(lambda a: jnp.swapaxes(a, 0, 1), outs)
+
+
+# ---------------------------------------------------------------------------
+# Mixed-family bank — per-tenant feature maps AND per-tenant hyperparams.
+#
+# The fused tiers above share ONE feature map across the bank (that is what
+# makes W grid-invariant in the kernels). When tenants need *different*
+# families — e.g. deterministic GQ for variance-free serving next to
+# Monte-Carlo RFF sweeps — their trig-canonical params stack into a
+# (B, d, D) / (B, D) / (B, D) TrigFeatures pytree and the bank vmaps the
+# SAME per-tick recursions the single-tenant drivers use, over
+# (feature row, BankHParams row, state row). Per-tenant trajectories match
+# the sequential single-tenant runs to batched-reduction rounding (KLMS
+# ~1e-6 f32; KRLS inherits the bank tier's 1e-3 f32 drift bound through
+# the P recursion — same tolerance the generic bank tests pin).
+# ---------------------------------------------------------------------------
+
+
+def stack_feature_maps(fms: Sequence[FeatureLike]) -> TrigFeatures:
+    """Stack per-tenant trig-canonical maps into one bank-axis pytree.
+
+    All maps must share ``input_dim`` and ``num_features`` (pad D with
+    zero-scale features to mix sizes); any trig family mixes freely. The
+    result's leaves carry a leading bank axis: omega ``(B, d, D)``, bias
+    ``(B, D)``, scale ``(B, D)``.
+    """
+    tfs = [as_trig(fm) for fm in fms]
+    shapes = {(tf.input_dim, tf.num_features) for tf in tfs}
+    if len(shapes) != 1:
+        raise ValueError(
+            f"stacked feature maps must share (d, D); got {sorted(shapes)}"
+        )
+    return TrigFeatures(
+        omega=jnp.stack([tf.omega for tf in tfs]),
+        bias=jnp.stack([tf.bias for tf in tfs]),
+        scale=jnp.stack([tf.scale for tf in tfs]),
+    )
+
+
+def mixed_klms_bank_run(
+    tfs: TrigFeatures,
+    xs: jax.Array,
+    ys: jax.Array,
+    hparams: Optional[BankHParams] = None,
+    mu: Union[float, jax.Array] = 0.5,
+    state: Optional[LMSState] = None,
+) -> tuple[LMSState, StepOut]:
+    """Drive B KLMS tenants with per-tenant feature maps in one scan.
+
+    ``tfs`` is a :func:`stack_feature_maps` pytree (leading bank axis);
+    ``hparams`` supplies per-tenant ``mu`` (or pass ``mu`` directly). Each
+    tenant's trajectory is its sequential ``rff_klms_run`` with its own
+    map — the bank axis batches the identical per-tick recursion, so the
+    two differ only by batched-GEMM reduction order (~1e-6 f32, tested).
+    """
+    size = ys.shape[0]
+    if hparams is None:
+        hparams = bank_hparams(size, mu=mu, dtype=tfs.omega.dtype)
+    if state is None:
+        # Stacked leaves carry a leading bank axis, so D is the LAST axis.
+        single = rff_klms_init(tfs.omega.shape[-1], tfs.omega.dtype)
+        state = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (size,) + a.shape), single
+        )
+
+    def tick_one(s, tf, hp, x, y):
+        return rff_klms_step(s, (x, y), tf, hp.mu)
+
+    def body(s, xy):
+        return jax.vmap(tick_one)(s, tfs, hparams, *xy)
+
+    xs_t = jnp.swapaxes(xs, 0, 1)  # (n, B, d) time-major
+    ys_t = jnp.swapaxes(ys, 0, 1)
+    state, outs = jax.lax.scan(body, state, (xs_t, ys_t))
+    return state, jax.tree.map(lambda a: jnp.swapaxes(a, 0, 1), outs)
+
+
+def mixed_krls_bank_run(
+    tfs: TrigFeatures,
+    xs: jax.Array,
+    ys: jax.Array,
+    hparams: Optional[BankHParams] = None,
+    lam: Union[float, jax.Array] = 1e-4,
+    beta: Union[float, jax.Array] = 0.9995,
+    state: Optional[RLSState] = None,
+) -> tuple[RLSState, StepOut]:
+    """Drive B EW-RLS tenants with per-tenant feature maps in one scan.
+
+    Per-tenant ``beta`` and init ``lam`` come from ``hparams`` (or the
+    ``lam``/``beta`` arguments). Matches sequential ``rff_krls_run`` calls
+    to the bank tier's f32 drift bound (the P recursion amplifies batched-
+    reduction rounding; 1e-3 over ~100 ticks, same as the generic bank).
+    """
+    size = ys.shape[0]
+    if hparams is None:
+        hparams = bank_hparams(
+            size, beta=beta, lam=lam, dtype=tfs.omega.dtype
+        )
+    if state is None:
+        dfeat = tfs.omega.shape[-1]  # leading axis is the bank, D is last
+        state = jax.vmap(
+            lambda hp: rff_krls_init(dfeat, hp.lam, tfs.omega.dtype)
+        )(hparams)
+
+    def tick_one(s, tf, hp, x, y):
+        return rff_krls_step(s, (x, y), tf, hp.beta)
+
+    def body(s, xy):
+        return jax.vmap(tick_one)(s, tfs, hparams, *xy)
+
+    xs_t = jnp.swapaxes(xs, 0, 1)  # (n, B, d) time-major
     ys_t = jnp.swapaxes(ys, 0, 1)
     state, outs = jax.lax.scan(body, state, (xs_t, ys_t))
     return state, jax.tree.map(lambda a: jnp.swapaxes(a, 0, 1), outs)

@@ -19,7 +19,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.rff import RFF, rff_features
+from repro.features.base import FeatureLike, feature_dtype, featurize
 from repro.kernels.chunking import time_blocks, unblock_time, valid_time_mask
 
 __all__ = [
@@ -61,11 +61,18 @@ def lms_step(
 
 
 def rff_klms_step(
-    state: LMSState, sample: tuple[jax.Array, jax.Array], rff: RFF, mu: float
+    state: LMSState,
+    sample: tuple[jax.Array, jax.Array],
+    rff: FeatureLike,
+    mu: float,
 ) -> tuple[LMSState, StepOut]:
-    """Paper §4 steps 1–3 on one ``(x_n, y_n)`` pair."""
+    """Paper §4 steps 1–3 on one ``(x_n, y_n)`` pair.
+
+    ``rff`` is any feature map satisfying the :mod:`repro.features`
+    contract — the legacy ``RFF`` struct, a canonical ``TrigFeatures``, or a
+    ``FeatureMap`` of any family (incl. non-trig Taylor)."""
     x, y = sample
-    z = rff_features(rff, x)
+    z = featurize(rff, x)
     theta, out = lms_step(state.theta, z, y, mu)
     return LMSState(theta=theta, step=state.step + 1), out
 
@@ -73,7 +80,7 @@ def rff_klms_step(
 def rff_nklms_step(
     state: LMSState,
     sample: tuple[jax.Array, jax.Array],
-    rff: RFF,
+    rff: FeatureLike,
     mu: float,
     eps: float = 1e-6,
 ) -> tuple[LMSState, StepOut]:
@@ -83,7 +90,7 @@ def rff_nklms_step(
     Gaussian-kernel RFF this behaves like plain KLMS with auto step-sizing.
     """
     x, y = sample
-    z = rff_features(rff, x)
+    z = featurize(rff, x)
     y_hat = state.theta @ z
     err = y - y_hat
     theta = state.theta + (mu / (eps + z @ z)) * err * z
@@ -91,7 +98,7 @@ def rff_nklms_step(
 
 
 def rff_klms_run(
-    rff: RFF,
+    rff: FeatureLike,
     xs: jax.Array,
     ys: jax.Array,
     mu: float,
@@ -112,7 +119,7 @@ def rff_klms_run(
     the per-tick scan to feature-GEMM rounding (tested).
     """
     if state is None:
-        state = rff_klms_init(rff.num_features, rff.omega.dtype)
+        state = rff_klms_init(rff.num_features, feature_dtype(rff))
     if chunk is not None:
         return _rff_klms_run_chunked(rff, xs, ys, mu, state, normalized, chunk)
     step = rff_nklms_step if normalized else rff_klms_step
@@ -124,7 +131,7 @@ def rff_klms_run(
 
 
 def _rff_klms_run_chunked(
-    rff: RFF,
+    rff: FeatureLike,
     xs: jax.Array,
     ys: jax.Array,
     mu: float,
@@ -141,7 +148,7 @@ def _rff_klms_run_chunked(
 
     def body(s: LMSState, args):
         xc, yc, mc = args
-        zc = rff_features(rff, xc)  # (T, D) — one GEMM per chunk
+        zc = featurize(rff, xc)  # (T, D) — one GEMM per chunk
 
         def tick(st: LMSState, zym):
             z, y, m = zym
@@ -168,7 +175,7 @@ def rff_klms_batch_step(
     state: LMSState,
     xb: jax.Array,
     yb: jax.Array,
-    rff: RFF,
+    rff: FeatureLike,
     mu: float,
 ) -> tuple[LMSState, jax.Array]:
     """Mini-batch LMS: average the per-sample gradients of a batch.
@@ -177,7 +184,7 @@ def rff_klms_batch_step(
     feature kernel instead of ``B`` matvecs); it changes the stochastic
     trajectory but not the stationary point. Returns (state, prior errors).
     """
-    zb = rff_features(rff, xb)  # (B, D)
+    zb = featurize(rff, xb)  # (B, D)
     preds = zb @ state.theta
     errs = yb - preds
     grad = zb.T @ errs / xb.shape[0]

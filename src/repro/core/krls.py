@@ -35,7 +35,13 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.distributed import _mark_varying, _shard_map
 from repro.core.klms import StepOut
-from repro.core.rff import RFF, rff_features
+from repro.features.base import (
+    FeatureLike,
+    TrigFeatures,
+    as_trig,
+    feature_dtype,
+    featurize,
+)
 from repro.kernels.chunking import time_blocks, unblock_time, valid_time_mask
 
 __all__ = [
@@ -94,17 +100,17 @@ def rls_step(
 def rff_krls_step(
     state: RLSState,
     sample: tuple[jax.Array, jax.Array],
-    rff: RFF,
+    rff: FeatureLike,
     beta: float = 0.9995,
 ) -> tuple[RLSState, StepOut]:
     x, y = sample
-    z = rff_features(rff, x)
+    z = featurize(rff, x)
     theta, pmat, out = rls_step(state.theta, state.pmat, z, y, beta)
     return RLSState(theta=theta, pmat=pmat, step=state.step + 1), out
 
 
 def rff_krls_run(
-    rff: RFF,
+    rff: FeatureLike,
     xs: jax.Array,
     ys: jax.Array,
     lam: float = 1e-4,
@@ -120,7 +126,7 @@ def rff_krls_run(
     Matches the per-tick scan to feature-GEMM rounding (tested).
     """
     if state is None:
-        state = rff_krls_init(rff.num_features, lam, rff.omega.dtype)
+        state = rff_krls_init(rff.num_features, lam, feature_dtype(rff))
     if chunk is not None:
         return _rff_krls_run_chunked(rff, xs, ys, beta, state, chunk)
 
@@ -131,7 +137,7 @@ def rff_krls_run(
 
 
 def _rff_krls_run_chunked(
-    rff: RFF,
+    rff: FeatureLike,
     xs: jax.Array,
     ys: jax.Array,
     beta: float,
@@ -146,7 +152,7 @@ def _rff_krls_run_chunked(
 
     def body(s: RLSState, args):
         xc, yc, mc = args
-        zc = rff_features(rff, xc)  # (T, D) — one GEMM per chunk
+        zc = featurize(rff, xc)  # (T, D) — one GEMM per chunk
 
         def tick(st: RLSState, zym):
             z, y, m = zym
@@ -170,9 +176,12 @@ def _rff_krls_run_chunked(
 # ---------------------------------------------------------------------------
 # Sharded RFF-KRLS — partition P (and the feature bank) over a mesh axis.
 #
-# Layout (mesh axis ``shard``, n = axis size, Dn = D / n):
+# Layout (mesh axis ``shard``, n = axis size, Dn = D / n). The feature bank
+# is the canonical affine-trig form (repro.features.as_trig), so any trig
+# family — RFF, ORF, QMC, weighted Gaussian quadrature — shards identically:
 #   omega (d, D)  -> column blocks (d, Dn)   each shard owns features rows_i
 #   bias  (D,)    -> blocks (Dn,)
+#   scale (D,)    -> blocks (Dn,)            per-feature quadrature weights
 #   theta (D,)    -> row blocks (Dn,)
 #   P     (D, D)  -> row blocks (Dn, D)      per-shard bytes: 4*D*Dn
 #
@@ -198,16 +207,22 @@ def krls_state_specs(axis: str = KRLS_SHARD_AXIS) -> RLSState:
     return RLSState(theta=P(axis), pmat=P(axis, None), step=P())
 
 
-def krls_feature_specs(axis: str = KRLS_SHARD_AXIS) -> RFF:
-    """PartitionSpecs for the feature bank: omega/bias column-sharded."""
-    return RFF(omega=P(None, axis), bias=P(axis))
+def krls_feature_specs(axis: str = KRLS_SHARD_AXIS) -> TrigFeatures:
+    """PartitionSpecs for the canonical trig feature bank: omega/bias/scale
+    column-sharded (each shard featurizes exactly its P row block's slice)."""
+    return TrigFeatures(omega=P(None, axis), bias=P(axis), scale=P(axis))
 
 
-def shard_krls_rff(mesh: Mesh, rff: RFF, axis: str = KRLS_SHARD_AXIS) -> RFF:
-    """Place the feature bank with its columns partitioned over ``axis``."""
+def shard_krls_rff(
+    mesh: Mesh, rff: FeatureLike, axis: str = KRLS_SHARD_AXIS
+) -> TrigFeatures:
+    """Canonicalize to the affine-trig form and place it with feature
+    columns partitioned over ``axis``. Any trig family works (RFF, ORF, QMC,
+    GQ); non-trig families (Taylor) have no column decomposition of the
+    featurize GEMM and raise here."""
     return jax.tree.map(
         lambda a, s: jax.device_put(a, NamedSharding(mesh, s)),
-        rff,
+        as_trig(rff),
         krls_feature_specs(axis),
     )
 
@@ -238,6 +253,7 @@ def _sharded_rls_tick(
     pmat_l: jax.Array,  # (Dn, D) local row block
     omega_l: jax.Array,  # (d, Dn) local feature columns
     bias_l: jax.Array,  # (Dn,)
+    scale_l: jax.Array,  # (Dn,) local per-feature scales
     x: jax.Array,  # (d,) replicated
     y: jax.Array,  # () replicated
     beta: float,
@@ -249,8 +265,7 @@ def _sharded_rls_tick(
     dloc = theta_l.shape[0]
     offset = jax.lax.axis_index(axis) * dloc
 
-    scale = jnp.sqrt(2.0 / dfull).astype(omega_l.dtype)
-    z_l = scale * jnp.cos(x @ omega_l + bias_l)  # (Dn,) local feature slice
+    z_l = scale_l * jnp.cos(x @ omega_l + bias_l)  # (Dn,) local slice
 
     pz_part = z_l @ pmat_l  # (D,) — P^T z contribution of our rows (P sym)
     yhat_part = z_l @ theta_l  # () partial prediction
@@ -277,6 +292,7 @@ def _sharded_rls_block_tick(
     pmat_l: jax.Array,  # (Dn, D) local row block
     omega_l: jax.Array,  # (d, Dn) local feature columns
     bias_l: jax.Array,  # (Dn,)
+    scale_l: jax.Array,  # (Dn,) local per-feature scales
     xs: jax.Array,  # (k, d) replicated block of samples
     ys: jax.Array,  # (k,) replicated
     mask: jax.Array,  # (k,) replicated validity gate (1 = real tick)
@@ -308,8 +324,7 @@ def _sharded_rls_block_tick(
     dloc = theta_l.shape[0]
     offset = jax.lax.axis_index(axis) * dloc
 
-    scale = jnp.sqrt(2.0 / dfull).astype(omega_l.dtype)
-    z_l = scale * jnp.cos(xs @ omega_l + bias_l)  # (k, Dn) local slices
+    z_l = scale_l * jnp.cos(xs @ omega_l + bias_l)  # (k, Dn) local slices
     pz0_part = z_l @ pmat_l  # (k, D) — P_0^T z_j contributions (P sym)
     yhat0_part = z_l @ theta_l  # (k,) partial block-start predictions
     zero = jnp.zeros((), offset.dtype)  # match axis_index dtype under x64
@@ -364,23 +379,25 @@ def _sharded_rls_block_tick(
 
 def make_sharded_krls_step(
     mesh: Mesh,
-    rff: RFF,
+    rff: FeatureLike,
     beta: float = 0.9995,
     axis: str = KRLS_SHARD_AXIS,
 ):
     """Jitted one-tick function ``(state, x, y) -> (state, StepOut)``.
 
-    ``rff`` may be given unsharded; it is placed via :func:`shard_krls_rff`
-    and closed over. State arrays must carry the :func:`krls_state_specs`
-    layout (use :func:`sharded_krls_init`).
+    ``rff`` is any trig-canonical feature map, given unsharded; it is placed
+    via :func:`shard_krls_rff` and closed over. State arrays must carry the
+    :func:`krls_state_specs` layout (use :func:`sharded_krls_init`).
     """
-    rff = shard_krls_rff(mesh, rff, axis)
-    dfull = rff.num_features
+    tf = shard_krls_rff(mesh, rff, axis)
+    dfull = tf.num_features
     sspec = krls_state_specs(axis)
+    fspec = krls_feature_specs(axis)
 
-    def body(omega_l, bias_l, theta_l, pmat_l, step, x, y):
+    def body(omega_l, bias_l, scale_l, theta_l, pmat_l, step, x, y):
         theta_l, pmat_l, out = _sharded_rls_tick(
-            theta_l, pmat_l, omega_l, bias_l, x, y, beta, axis, dfull
+            theta_l, pmat_l, omega_l, bias_l, scale_l, x, y, beta, axis,
+            dfull,
         )
         return theta_l, pmat_l, step + 1, out
 
@@ -388,7 +405,8 @@ def make_sharded_krls_step(
         body,
         mesh=mesh,
         in_specs=(
-            P(None, axis), P(axis), sspec.theta, sspec.pmat, sspec.step,
+            fspec.omega, fspec.bias, fspec.scale,
+            sspec.theta, sspec.pmat, sspec.step,
             P(), P(),
         ),
         out_specs=(sspec.theta, sspec.pmat, sspec.step, P()),
@@ -397,7 +415,8 @@ def make_sharded_krls_step(
     @jax.jit
     def step_fn(state: RLSState, x: jax.Array, y: jax.Array):
         theta, pmat, step, out = shmapped(
-            rff.omega, rff.bias, state.theta, state.pmat, state.step, x, y
+            tf.omega, tf.bias, tf.scale,
+            state.theta, state.pmat, state.step, x, y,
         )
         return RLSState(theta=theta, pmat=pmat, step=step), out
 
@@ -406,7 +425,7 @@ def make_sharded_krls_step(
 
 def make_sharded_krls_block_step(
     mesh: Mesh,
-    rff: RFF,
+    rff: FeatureLike,
     beta: float = 0.9995,
     combine_every: int = 8,
     axis: str = KRLS_SHARD_AXIS,
@@ -419,15 +438,17 @@ def make_sharded_krls_block_step(
     :func:`_sharded_rls_block_tick` for the replay construction and its
     drift bound).
     """
-    rff = shard_krls_rff(mesh, rff, axis)
-    dfull = rff.num_features
+    tf = shard_krls_rff(mesh, rff, axis)
+    dfull = tf.num_features
     k = combine_every
     sspec = krls_state_specs(axis)
+    fspec = krls_feature_specs(axis)
 
-    def body(omega_l, bias_l, theta_l, pmat_l, step, xs, ys):
+    def body(omega_l, bias_l, scale_l, theta_l, pmat_l, step, xs, ys):
         mask = jnp.ones((k,), xs.dtype)
         theta_l, pmat_l, out = _sharded_rls_block_tick(
-            theta_l, pmat_l, omega_l, bias_l, xs, ys, mask, beta, axis, dfull
+            theta_l, pmat_l, omega_l, bias_l, scale_l, xs, ys, mask, beta,
+            axis, dfull,
         )
         return theta_l, pmat_l, step + k, out
 
@@ -435,7 +456,8 @@ def make_sharded_krls_block_step(
         body,
         mesh=mesh,
         in_specs=(
-            P(None, axis), P(axis), sspec.theta, sspec.pmat, sspec.step,
+            fspec.omega, fspec.bias, fspec.scale,
+            sspec.theta, sspec.pmat, sspec.step,
             P(), P(),
         ),
         out_specs=(sspec.theta, sspec.pmat, sspec.step, P()),
@@ -444,7 +466,8 @@ def make_sharded_krls_block_step(
     @jax.jit
     def block_step_fn(state: RLSState, xs: jax.Array, ys: jax.Array):
         theta, pmat, step, out = shmapped(
-            rff.omega, rff.bias, state.theta, state.pmat, state.step, xs, ys
+            tf.omega, tf.bias, tf.scale,
+            state.theta, state.pmat, state.step, xs, ys,
         )
         return RLSState(theta=theta, pmat=pmat, step=step), out
 
@@ -452,27 +475,26 @@ def make_sharded_krls_block_step(
 
 
 def make_sharded_krls_predict(
-    mesh: Mesh, rff: RFF, axis: str = KRLS_SHARD_AXIS
+    mesh: Mesh, rff: FeatureLike, axis: str = KRLS_SHARD_AXIS
 ):
     """Jitted ``(state, x) -> y_hat`` on the sharded layout (one psum)."""
-    rff = shard_krls_rff(mesh, rff, axis)
-    dfull = rff.num_features
-    scale = float((2.0 / dfull) ** 0.5)
+    tf = shard_krls_rff(mesh, rff, axis)
+    fspec = krls_feature_specs(axis)
 
-    def body(omega_l, bias_l, theta_l, x):
-        z_l = scale * jnp.cos(x @ omega_l + bias_l)
+    def body(omega_l, bias_l, scale_l, theta_l, x):
+        z_l = scale_l * jnp.cos(x @ omega_l + bias_l)
         return jax.lax.psum(z_l @ theta_l, axis)
 
     shmapped = _shard_map(
         body,
         mesh=mesh,
-        in_specs=(P(None, axis), P(axis), P(axis), P()),
+        in_specs=(fspec.omega, fspec.bias, fspec.scale, P(axis), P()),
         out_specs=P(),
     )
 
     @jax.jit
     def predict_fn(state: RLSState, x: jax.Array) -> jax.Array:
-        return shmapped(rff.omega, rff.bias, state.theta, x)
+        return shmapped(tf.omega, tf.bias, tf.scale, state.theta, x)
 
     return predict_fn
 
@@ -492,16 +514,17 @@ def _sharded_krls_run_program(
     sspec = krls_state_specs(axis)
     k = combine_every
 
+    fspec = krls_feature_specs(axis)
     if k == 1:
 
-        def node(omega_l, bias_l, theta_l, pmat_l, step, xs, ys):
+        def node(omega_l, bias_l, scale_l, theta_l, pmat_l, step, xs, ys):
             carry0 = _mark_varying((theta_l, pmat_l), axis)
 
             def body(carry, xy):
                 th, pm = carry
                 x, y = xy
                 th, pm, out = _sharded_rls_tick(
-                    th, pm, omega_l, bias_l, x, y, beta, axis, dfull
+                    th, pm, omega_l, bias_l, scale_l, x, y, beta, axis, dfull
                 )
                 return (th, pm), out
 
@@ -509,19 +532,23 @@ def _sharded_krls_run_program(
             return theta_l, pmat_l, step + xs.shape[0], outs
 
         in_specs = (
-            P(None, axis), P(axis), sspec.theta, sspec.pmat, sspec.step,
+            fspec.omega, fspec.bias, fspec.scale,
+            sspec.theta, sspec.pmat, sspec.step,
             P(), P(),
         )
     else:
 
-        def node(omega_l, bias_l, theta_l, pmat_l, step, xs, ys, mask):
+        def node(
+            omega_l, bias_l, scale_l, theta_l, pmat_l, step, xs, ys, mask
+        ):
             carry0 = _mark_varying((theta_l, pmat_l), axis)
 
             def body(carry, xym):
                 th, pm = carry
                 xb, yb, mb = xym
                 th, pm, out = _sharded_rls_block_tick(
-                    th, pm, omega_l, bias_l, xb, yb, mb, beta, axis, dfull
+                    th, pm, omega_l, bias_l, scale_l, xb, yb, mb, beta,
+                    axis, dfull,
                 )
                 return (th, pm), out
 
@@ -533,7 +560,8 @@ def _sharded_krls_run_program(
             return theta_l, pmat_l, step + ticks, outs
 
         in_specs = (
-            P(None, axis), P(axis), sspec.theta, sspec.pmat, sspec.step,
+            fspec.omega, fspec.bias, fspec.scale,
+            sspec.theta, sspec.pmat, sspec.step,
             P(), P(), P(),
         )
 
@@ -548,7 +576,7 @@ def _sharded_krls_run_program(
 
 def sharded_krls_run(
     mesh: Mesh,
-    rff: RFF,
+    rff: FeatureLike,
     xs: jax.Array,
     ys: jax.Array,
     lam: float = 1e-4,
@@ -572,15 +600,16 @@ def sharded_krls_run(
     """
     if state is None:
         state = sharded_krls_init(
-            mesh, rff.num_features, lam, rff.omega.dtype, axis
+            mesh, rff.num_features, lam, feature_dtype(rff), axis
         )
-    rff = shard_krls_rff(mesh, rff, axis)
+    tf = shard_krls_rff(mesh, rff, axis)
     program = _sharded_krls_run_program(
-        mesh, axis, beta, rff.num_features, combine_every
+        mesh, axis, beta, tf.num_features, combine_every
     )
     if combine_every == 1:
         theta, pmat, step, outs = program(
-            rff.omega, rff.bias, state.theta, state.pmat, state.step, xs, ys
+            tf.omega, tf.bias, tf.scale,
+            state.theta, state.pmat, state.step, xs, ys,
         )
         return RLSState(theta=theta, pmat=pmat, step=step), outs
 
@@ -590,7 +619,8 @@ def sharded_krls_run(
     ys_b = time_blocks(ys, k)
     mask_b = valid_time_mask(n, k, xs.dtype)
     theta, pmat, step, outs = program(
-        rff.omega, rff.bias, state.theta, state.pmat, state.step,
+        tf.omega, tf.bias, tf.scale,
+        state.theta, state.pmat, state.step,
         xs_b, ys_b, mask_b,
     )
     outs = jax.tree.map(lambda a: a[:n], outs)

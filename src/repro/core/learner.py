@@ -16,9 +16,12 @@ adapter is numerically identical to the ``rff_*_run`` it wraps (tested).
 
 The design also makes the *feature family* a constructor argument ("No-Trick
 Kernel Adaptive Filtering using Deterministic Features" motivates swapping
-RFF for deterministic maps): any ``RFF``-shaped parameter struct works, and a
-future deterministic-feature family only needs to provide the same
-``rff_features`` contract.
+RFF for deterministic maps): every RFF-family adapter takes any
+:mod:`repro.features` map — the legacy ``RFF`` struct, a canonical
+``TrigFeatures``, or a ``FeatureMap`` of any family (rff / orf / qmc / gq /
+taylor) — and drives it through the generic ``featurize`` contract. Only
+the sharded-KRLS adapter requires a trig-canonical family (its shard_map
+program inlines the affine-trig activation).
 
 An ``OnlineLearner`` is a static bundle of pure functions — close over it in
 jitted code (don't pass it as a traced argument); only ``state`` is a pytree.
@@ -46,7 +49,7 @@ from repro.core.krls import (
 )
 from repro.core.krls_ald import ald_krls_init, ald_krls_predict, ald_krls_step
 from repro.core.qklms import qklms_init, qklms_predict, qklms_step
-from repro.core.rff import RFF, rff_features
+from repro.features.base import FeatureLike, feature_dtype, featurize
 
 __all__ = [
     "OnlineLearner",
@@ -97,44 +100,49 @@ class OnlineLearner:
         return jax.lax.scan(body, state, (xs, ys))
 
 
-def klms_learner(rff: RFF, mu: float) -> OnlineLearner:
-    """RFFKLMS (paper §4): fixed-size theta, per-step O(D d)."""
+def klms_learner(rff: FeatureLike, mu: float) -> OnlineLearner:
+    """RFFKLMS (paper §4): fixed-size theta, per-step O(D d).
+
+    ``rff`` is any feature map from :mod:`repro.features` (or the legacy
+    ``RFF`` struct) — deterministic families drop in unchanged."""
     return OnlineLearner(
         init_fn=lambda key=None: rff_klms_init(
-            rff.num_features, rff.omega.dtype
+            rff.num_features, feature_dtype(rff)
         ),
         step_fn=lambda s, x, y: rff_klms_step(s, (x, y), rff, mu),
-        predict_fn=lambda s, x: rff_features(rff, x) @ s.theta,
+        predict_fn=lambda s, x: featurize(rff, x) @ s.theta,
     )
 
 
-def nklms_learner(rff: RFF, mu: float, eps: float = 1e-6) -> OnlineLearner:
+def nklms_learner(
+    rff: FeatureLike, mu: float, eps: float = 1e-6
+) -> OnlineLearner:
     """Normalized RFFKLMS: mu_eff = mu / (eps + ||z||^2)."""
     return OnlineLearner(
         init_fn=lambda key=None: rff_klms_init(
-            rff.num_features, rff.omega.dtype
+            rff.num_features, feature_dtype(rff)
         ),
         step_fn=lambda s, x, y: rff_nklms_step(s, (x, y), rff, mu, eps),
-        predict_fn=lambda s, x: rff_features(rff, x) @ s.theta,
+        predict_fn=lambda s, x: featurize(rff, x) @ s.theta,
     )
 
 
 def krls_learner(
-    rff: RFF, lam: float = 1e-4, beta: float = 0.9995
+    rff: FeatureLike, lam: float = 1e-4, beta: float = 0.9995
 ) -> OnlineLearner:
     """RFFKRLS (paper §6): fixed (D,) theta + (D, D) inverse correlation."""
     return OnlineLearner(
         init_fn=lambda key=None: rff_krls_init(
-            rff.num_features, lam, rff.omega.dtype
+            rff.num_features, lam, feature_dtype(rff)
         ),
         step_fn=lambda s, x, y: rff_krls_step(s, (x, y), rff, beta),
-        predict_fn=lambda s, x: rff_features(rff, x) @ s.theta,
+        predict_fn=lambda s, x: featurize(rff, x) @ s.theta,
     )
 
 
 def sharded_krls_learner(
     mesh,
-    rff: RFF,
+    rff: FeatureLike,
     lam: float = 1e-4,
     beta: float = 0.9995,
     axis: str = KRLS_SHARD_AXIS,
@@ -151,7 +159,7 @@ def sharded_krls_learner(
     predict = make_sharded_krls_predict(mesh, rff, axis)
     return OnlineLearner(
         init_fn=lambda key=None: sharded_krls_init(
-            mesh, rff.num_features, lam, rff.omega.dtype, axis
+            mesh, rff.num_features, lam, feature_dtype(rff), axis
         ),
         step_fn=step,
         predict_fn=predict,

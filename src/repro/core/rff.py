@@ -12,8 +12,10 @@ Sampling ``D`` features gives the Monte-Carlo estimate (paper eq. (2)–(4)):
     z_Omega(x)   = sqrt(2/D) [cos(omega_i^T x + b_i)]_{i=1..D}.
 
 For the Gaussian kernel ``kappa_sigma(u, v) = exp(-||u-v||^2 / (2 sigma^2))``
-the spectral density is ``omega ~ N(0, I_d / sigma^2)`` (paper eq. (5); the
-``D`` exponent there is a typo for ``d``).
+the spectral density is ``omega ~ N(0, I_d / sigma^2)`` — paper eq. (5),
+whose published form reads ``sigma^D``: the ``D`` exponent is a typo for the
+input dimension ``d`` (the density normalizer is ``(sigma sqrt(2 pi))^-d``);
+``D`` is the paper's feature count, which never enters the density.
 
 Two feature families live here:
 
@@ -22,6 +24,12 @@ Two feature families live here:
 * :func:`sample_prf` / :func:`positive_random_features` — positive random
   features for the *exponential* (softmax) kernel, used by the RFF linear
   attention layer. Same fixed-size-state insight, different kernel.
+
+This module is the Monte-Carlo seed of the pluggable feature-map subsystem
+in :mod:`repro.features`: deterministic Gaussian-quadrature, Taylor, QMC and
+orthogonal families all satisfy the same contract there and canonicalize to
+the affine-trig form ``scale * cos(x @ W + b)`` that generalizes eq. (3) —
+new code should accept any such map rather than hardcoding :class:`RFF`.
 
 Everything is a pure function over an explicit, immutable parameter struct so
 it composes with jit / vmap / scan / pjit without ceremony.
@@ -133,10 +141,12 @@ def rff_features_unscaled(rff: RFF, x: jax.Array) -> jax.Array:
 def kernel_estimate(rff: RFF, x: jax.Array, y: jax.Array) -> jax.Array:
     """Monte-Carlo kernel estimate ``z(x)^T z(y)`` — paper eq. (4).
 
-    Broadcasts over leading axes: ``x (..., d)``, ``y (..., d)``.
+    Broadcasts over leading axes: ``x (..., d)``, ``y (..., d)``. When both
+    arguments are the same array object (the ``kappa(0)`` norm check), the
+    feature map is computed once instead of twice.
     """
     zx = rff_features(rff, x)
-    zy = rff_features(rff, y)
+    zy = zx if y is x else rff_features(rff, y)
     return jnp.sum(zx * zy, axis=-1)
 
 

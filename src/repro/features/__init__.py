@@ -1,0 +1,122 @@
+"""Pluggable feature-map subsystem: one contract, many families.
+
+The learners never see a family — they see :class:`FeatureMap` (a pytree
+param struct + pure ``featurize`` + metadata), and the fused Pallas paths
+see its canonical affine-trig form ``(W, b, per-feature scale)`` via
+:func:`as_trig`. Families:
+
+====== ============= ======================= ==============================
+family construction  variance                notes
+====== ============= ======================= ==============================
+rff    Monte-Carlo   O(1/sqrt(D)) MC         the paper's map (eq. (3)–(5))
+orf    Monte-Carlo   strictly below rff      QR blocks + chi row norms
+qmc    deterministic (log m)^d / m           Halton -> inverse Gaussian CDF
+gq     deterministic spectral (quadrature)   Gauss-Hermite nodes + weights
+taylor deterministic truncation (degree)     polynomial; no trig form
+====== ============= ======================= ==============================
+
+``make_feature_map`` is the registry entry point; deterministic families
+ignore the key argument (zero seed variance, bitwise reproducible).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.features.base import (
+    FeatureLike,
+    FeatureMap,
+    TrigFeatures,
+    as_trig,
+    as_trig_or_none,
+    feature_dtype,
+    feature_weights,
+    featurize,
+    input_dim,
+    num_features,
+    trig_features,
+    trig_from_rff,
+    trig_map,
+    trig_weights,
+    uniform_trig_scale,
+)
+from repro.features.deterministic import (
+    TaylorParams,
+    gq_map,
+    taylor_features,
+    taylor_map,
+    taylor_num_features,
+    taylor_weights,
+)
+from repro.features.qmc import halton_sequence, inverse_normal_cdf, qmc_map
+from repro.features.random import orf_map, rff_map
+
+__all__ = [
+    "FAMILIES",
+    "FeatureLike",
+    "FeatureMap",
+    "TrigFeatures",
+    "TaylorParams",
+    "as_trig",
+    "as_trig_or_none",
+    "feature_dtype",
+    "feature_weights",
+    "featurize",
+    "gq_map",
+    "halton_sequence",
+    "input_dim",
+    "inverse_normal_cdf",
+    "make_feature_map",
+    "num_features",
+    "orf_map",
+    "qmc_map",
+    "rff_map",
+    "taylor_features",
+    "taylor_map",
+    "taylor_num_features",
+    "taylor_weights",
+    "trig_features",
+    "trig_from_rff",
+    "trig_map",
+    "trig_weights",
+    "uniform_trig_scale",
+]
+
+FAMILIES = ("rff", "orf", "qmc", "gq", "taylor")
+
+
+def make_feature_map(
+    family: str,
+    input_dim: int,
+    num_features: int,
+    sigma: float,
+    key: Optional[jax.Array] = None,
+    dtype: jnp.dtype = jnp.float32,
+    degree: Optional[int] = None,
+) -> FeatureMap:
+    """Build a feature map by family name (the scenario/config axis).
+
+    Monte-Carlo families (``rff`` / ``orf``) require ``key``; deterministic
+    families ignore it. ``taylor`` takes ``degree`` (default: the largest
+    degree whose feature count fits ``num_features``) and its actual
+    ``num_features`` is ``C(d + degree, degree)``.
+    """
+    if family in ("rff", "orf"):
+        if key is None:
+            raise ValueError(f"family {family!r} is Monte-Carlo: pass key=")
+        builder = rff_map if family == "rff" else orf_map
+        return builder(key, input_dim, num_features, sigma, dtype)
+    if family == "qmc":
+        return qmc_map(input_dim, num_features, sigma, dtype)
+    if family == "gq":
+        return gq_map(input_dim, num_features, sigma, dtype)
+    if family == "taylor":
+        if degree is None:
+            degree = 1
+            while taylor_num_features(input_dim, degree + 1) <= num_features:
+                degree += 1
+        return taylor_map(input_dim, degree, sigma, dtype)
+    raise ValueError(f"unknown feature family {family!r}; know {FAMILIES}")

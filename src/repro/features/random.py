@@ -1,0 +1,57 @@
+"""Monte-Carlo trig families: iid RFF and orthogonal random features (ORF).
+
+Both wrap :func:`repro.core.rff.sample_rff` (the paper's sampler, eq. (5))
+and canonicalize to :class:`repro.features.base.TrigFeatures` with the
+uniform ``sqrt(2/D)`` Monte-Carlo scale — featurizing through the subsystem
+is bitwise the legacy ``rff_features`` path.
+
+ORF (Yu et al. 2016): blocks of up to ``d`` spectral samples are QR-
+orthogonalized and re-scaled to chi(d)-distributed row norms. Marginals are
+unchanged (the estimator stays unbiased) but the kernel-approximation
+variance drops strictly at identical featurize cost — the same D buys a
+lower error floor.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.rff import sample_rff
+from repro.features.base import FeatureMap, trig_from_rff, trig_map
+
+__all__ = ["rff_map", "orf_map"]
+
+
+def rff_map(
+    key: jax.Array,
+    input_dim: int,
+    num_features: int,
+    sigma: float,
+    dtype: jnp.dtype = jnp.float32,
+) -> FeatureMap:
+    """The paper's Monte-Carlo RFF map for ``exp(-||u||^2 / (2 sigma^2))``.
+
+    ``omega ~ N(0, I/sigma^2)``, ``bias ~ U[0, 2pi]``, uniform scale.
+    """
+    rff = sample_rff(key, input_dim, num_features, sigma, dtype)
+    return trig_map("rff", trig_from_rff(rff), deterministic=False)
+
+
+def orf_map(
+    key: jax.Array,
+    input_dim: int,
+    num_features: int,
+    sigma: float,
+    dtype: jnp.dtype = jnp.float32,
+) -> FeatureMap:
+    """Orthogonal random features: QR-orthogonalized blocks, chi-scaled rows.
+
+    Identical cost and contract to :func:`rff_map`; strictly lower Monte-
+    Carlo variance (rows within a block are exactly orthogonal — tested as a
+    property invariant).
+    """
+    rff = sample_rff(
+        key, input_dim, num_features, sigma, dtype, orthogonal=True
+    )
+    return trig_map("orf", trig_from_rff(rff), deterministic=False)

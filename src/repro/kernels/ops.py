@@ -67,20 +67,24 @@ def rff_features(
     x: jax.Array,
     w: jax.Array,
     b: jax.Array,
+    s: jax.Array | None = None,
     *,
     mode: str = "auto",
     block_m: int = 128,
     block_n: int = 128,
     block_k: int = 128,
 ) -> jax.Array:
-    """Feature map ``sqrt(2/D) cos(x @ w + b)`` over arbitrary leading dims."""
+    """Affine-trig feature map ``s * cos(x @ w + b)`` over arbitrary leading
+    dims. ``s`` optional ``(D,)`` per-feature scales (the canonical form of
+    every trig family in repro.features); None = Monte-Carlo ``sqrt(2/D)``.
+    """
     use_pallas, interpret = _use_pallas(mode)
     if not use_pallas:
-        return ref.rff_features_ref(x, w, b)
+        return ref.rff_features_ref(x, w, b, s)
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
     out = rff_features_pallas(
-        x2, w, b,
+        x2, w, b, s,
         block_m=block_m, block_n=block_n, block_k=block_k,
         interpret=interpret,
     )
@@ -95,6 +99,7 @@ def rff_klms_bank_step(
     w: jax.Array,
     b: jax.Array,
     mu: jax.Array | float,
+    s: jax.Array | None = None,
     *,
     mode: str = "auto",
     block_b: int = 8,
@@ -102,13 +107,14 @@ def rff_klms_bank_step(
     """Fused featurize+predict+update KLMS step for a bank of B filters.
 
     theta (B, D), x (B, d), y (B,), shared w (d, D) / b (D,), mu scalar or
-    (B,). Returns (theta_new, predictions, prior errors).
+    (B,), s optional (D,) per-feature scales (None = sqrt(2/D)). Returns
+    (theta_new, predictions, prior errors).
     """
     use_pallas, interpret = _use_pallas(mode)
     if not use_pallas:
-        return ref.rff_klms_bank_step_ref(theta, x, y, w, b, mu)
+        return ref.rff_klms_bank_step_ref(theta, x, y, w, b, mu, s)
     return rff_klms_bank_step_pallas(
-        theta, x, y, w, b, jnp.asarray(mu, theta.dtype),
+        theta, x, y, w, b, jnp.asarray(mu, theta.dtype), s,
         block_b=block_b, interpret=interpret,
     )
 
@@ -122,6 +128,7 @@ def rff_klms_bank_chunk(
     b: jax.Array,
     mu: jax.Array | float,
     mask: jax.Array | None = None,
+    s: jax.Array | None = None,
     *,
     mode: str = "auto",
     block_b: int = 8,
@@ -130,7 +137,8 @@ def rff_klms_bank_chunk(
     """T-chunked fused KLMS: advance a bank of B filters by T ticks at once.
 
     theta (B, D), xs (B, T, d), ys (B, T), shared w (d, D) / b (D,), mu
-    scalar or (B,), mask optional (B, T) validity gate (1 = apply update).
+    scalar or (B,), mask optional (B, T) validity gate (1 = apply update),
+    s optional (D,) per-feature scales (None = sqrt(2/D)).
     ``chunk`` bounds the ticks per kernel launch: ``None`` runs all T in one
     launch; ``chunk=k`` scans ceil(T/k) launches with a zero-masked final
     remainder. Returns (theta_new, predictions (B, T), errors (B, T)).
@@ -143,9 +151,12 @@ def rff_klms_bank_chunk(
 
     def launch(th, xc, yc, mc):
         if not use_pallas:
-            return ref.rff_klms_bank_chunk_ref(th, xc, yc, w, b, mu_arr, mc)
+            return ref.rff_klms_bank_chunk_ref(
+                th, xc, yc, w, b, mu_arr, mc, s
+            )
         return rff_klms_bank_chunk_pallas(
-            th, xc, yc, w, b, mu_arr, mc, block_b=block_b, interpret=interpret
+            th, xc, yc, w, b, mu_arr, mc, s,
+            block_b=block_b, interpret=interpret,
         )
 
     if chunk is None or tlen <= chunk:
@@ -176,20 +187,21 @@ def rff_krls_bank_step(
     w: jax.Array,
     b: jax.Array,
     beta: jax.Array | float,
+    s: jax.Array | None = None,
     *,
     mode: str = "auto",
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
     """Fused featurize+predict+RLS-downdate step for a bank of B tenants.
 
     theta (B, D), pmat (B, D, D), x (B, d), y (B,), shared w (d, D) /
-    b (D,), beta scalar or (B,). Returns (theta_new, pmat_new, predictions,
-    prior errors).
+    b (D,), beta scalar or (B,), s optional (D,) per-feature scales.
+    Returns (theta_new, pmat_new, predictions, prior errors).
     """
     use_pallas, interpret = _use_pallas(mode)
     if not use_pallas:
-        return ref.rff_krls_bank_step_ref(theta, pmat, x, y, w, b, beta)
+        return ref.rff_krls_bank_step_ref(theta, pmat, x, y, w, b, beta, s)
     return rff_krls_bank_step_pallas(
-        theta, pmat, x, y, w, b, jnp.asarray(beta, theta.dtype),
+        theta, pmat, x, y, w, b, jnp.asarray(beta, theta.dtype), s,
         interpret=interpret,
     )
 
@@ -204,6 +216,7 @@ def rff_krls_bank_chunk(
     b: jax.Array,
     beta: jax.Array | float,
     mask: jax.Array | None = None,
+    s: jax.Array | None = None,
     *,
     mode: str = "auto",
     chunk: int | None = None,
@@ -211,7 +224,8 @@ def rff_krls_bank_chunk(
     """T-chunked fused EW-RLS: advance a bank of B tenants by T ticks at once.
 
     theta (B, D), pmat (B, D, D), xs (B, T, d), ys (B, T), shared w (d, D) /
-    b (D,), beta scalar or (B,), mask optional (B, T) validity gate.
+    b (D,), beta scalar or (B,), mask optional (B, T) validity gate, s
+    optional (D,) per-feature scales (None = sqrt(2/D)).
     ``chunk`` bounds ticks per launch as in :func:`rff_klms_bank_chunk`.
     Returns (theta_new, pmat_new, predictions (B, T), errors (B, T)).
     """
@@ -224,10 +238,10 @@ def rff_krls_bank_chunk(
     def launch(th, pm, xc, yc, mc):
         if not use_pallas:
             return ref.rff_krls_bank_chunk_ref(
-                th, pm, xc, yc, w, b, beta_arr, mc
+                th, pm, xc, yc, w, b, beta_arr, mc, s
             )
         return rff_krls_bank_chunk_pallas(
-            th, pm, xc, yc, w, b, beta_arr, mc, interpret=interpret
+            th, pm, xc, yc, w, b, beta_arr, mc, s, interpret=interpret
         )
 
     if chunk is None or tlen <= chunk:

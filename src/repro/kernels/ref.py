@@ -8,6 +8,8 @@ import jax.numpy as jnp
 
 __all__ = [
     "rff_features_ref",
+    "klms_tick_math",
+    "krls_tick_math",
     "rff_klms_bank_step_ref",
     "rff_klms_bank_chunk_ref",
     "rff_krls_bank_step_ref",
@@ -18,26 +20,67 @@ __all__ = [
 ]
 
 
-def rff_features_ref(x, w, b):
-    """sqrt(2/D) cos(x @ w + b) — oracle for kernels/rff_features.py."""
-    d = w.shape[1]
-    return jnp.sqrt(2.0 / d).astype(x.dtype) * jnp.cos(x @ w + b)
+def rff_features_ref(x, w, b, s=None):
+    """``s * cos(x @ w + b)`` — oracle for kernels/rff_features.py.
 
-
-def rff_klms_bank_step_ref(theta, x, y, w, b, mu):
-    """Two-pass fused-KLMS-step oracle — for kernels/rff_klms_step.py.
-
-    theta (B, D), x (B, d), y (B,), mu scalar or (B,). Materializes the
-    feature block z (the HBM round-trip the fused kernel removes).
+    ``s`` is the per-feature scale row of the canonical affine-trig form
+    (repro.features); None means the Monte-Carlo ``sqrt(2/D)``.
     """
-    z = rff_features_ref(x, w, b)  # (B, D)
+    if s is None:
+        d = w.shape[1]
+        return jnp.sqrt(2.0 / d).astype(x.dtype) * jnp.cos(x @ w + b)
+    return s.astype(x.dtype) * jnp.cos(x @ w + b)
+
+
+def klms_tick_math(theta, z, y, mu_b, gate=None):
+    """ONE KLMS bank tick given a precomputed feature block ``z (B, D)``.
+
+    The single source of truth for the update math: the fused-kernel
+    oracles below AND the generic (featurize-based) bank fallback in
+    core/bank.py both delegate here, so the non-trig path can never
+    silently diverge from the oracle. ``gate`` optionally masks the state
+    update (masked ticks still emit their prior prediction/error); with
+    gate==1 the expression multiplies by exactly 1.0, preserving the
+    chunk-vs-tick bitwise contract.
+    """
     pred = jnp.sum(theta * z, axis=-1)
     err = y - pred
-    mu = jnp.broadcast_to(jnp.asarray(mu, theta.dtype), err.shape)
-    return theta + (mu * err)[:, None] * z, pred, err
+    upd = err if gate is None else gate * err
+    return theta + (mu_b * upd)[:, None] * z, pred, err
 
 
-def rff_klms_bank_chunk_ref(theta, xs, ys, w, b, mu, mask=None):
+def krls_tick_math(theta, pmat, z, y, beta_b):
+    """ONE EW-RLS bank tick (incl. the symmetrization pass) given ``z``.
+
+    Shared by the fused-kernel oracles and core/bank.py's generic fallback
+    — exactly ``core.krls.rls_step`` vmapped over the bank.
+    """
+    pred = jnp.sum(theta * z, axis=-1)
+    err = y - pred
+    pz = jnp.einsum("bij,bj->bi", pmat, z)  # (B, D)
+    denom = beta_b + jnp.sum(z * pz, axis=-1)
+    gain = pz / denom[:, None]
+    theta_new = theta + gain * err[:, None]
+    pmat_new = (
+        pmat - gain[:, :, None] * pz[:, None, :]
+    ) / beta_b[:, None, None]
+    pmat_new = 0.5 * (pmat_new + jnp.swapaxes(pmat_new, -1, -2))
+    return theta_new, pmat_new, pred, err
+
+
+def rff_klms_bank_step_ref(theta, x, y, w, b, mu, s=None):
+    """Two-pass fused-KLMS-step oracle — for kernels/rff_klms_step.py.
+
+    theta (B, D), x (B, d), y (B,), mu scalar or (B,), s optional (D,)
+    per-feature scales. Materializes the feature block z (the HBM
+    round-trip the fused kernel removes).
+    """
+    z = rff_features_ref(x, w, b, s)  # (B, D)
+    mu_b = jnp.broadcast_to(jnp.asarray(mu, theta.dtype), y.shape)
+    return klms_tick_math(theta, z, y, mu_b)
+
+
+def rff_klms_bank_chunk_ref(theta, xs, ys, w, b, mu, mask=None, s=None):
     """T-chunked KLMS oracle — for ``rff_klms_bank_chunk_pallas``.
 
     A ``lax.scan`` of the per-tick recursion over the chunk's time axis:
@@ -54,10 +97,8 @@ def rff_klms_bank_chunk_ref(theta, xs, ys, w, b, mu, mask=None):
 
     def tick(th, xym):
         x_t, y_t, m_t = xym
-        z = rff_features_ref(x_t, w, b)  # (B, D)
-        pred = jnp.sum(th * z, axis=-1)
-        err = y_t - pred
-        th = th + (mu_b * (m_t * err))[:, None] * z
+        z = rff_features_ref(x_t, w, b, s)  # (B, D)
+        th, pred, err = klms_tick_math(th, z, y_t, mu_b, gate=m_t)
         return th, (pred, err)
 
     xs_t = jnp.swapaxes(xs, 0, 1)  # (T, B, d) time-major
@@ -67,29 +108,21 @@ def rff_klms_bank_chunk_ref(theta, xs, ys, w, b, mu, mask=None):
     return theta, jnp.swapaxes(preds, 0, 1), jnp.swapaxes(errs, 0, 1)
 
 
-def rff_krls_bank_step_ref(theta, pmat, x, y, w, b, beta):
+def rff_krls_bank_step_ref(theta, pmat, x, y, w, b, beta, s=None):
     """Two-pass fused-KRLS-step oracle — for kernels/rff_krls_step.py.
 
     Exactly the EW-RLS recursion of ``core.krls.rls_step`` (including the
     symmetrization pass) vmapped over the bank: theta (B, D),
     pmat (B, D, D), x (B, d), y (B,), beta scalar or (B,) per-tenant
-    forgetting factors. Materializes z and pz in HBM (the round-trips the
-    fused kernel removes).
+    forgetting factors, s optional (D,) per-feature scales. Materializes z
+    and pz in HBM (the round-trips the fused kernel removes).
     """
-    z = rff_features_ref(x, w, b)  # (B, D)
-    pred = jnp.sum(theta * z, axis=-1)
-    err = y - pred
-    beta = jnp.broadcast_to(jnp.asarray(beta, theta.dtype), err.shape)
-    pz = jnp.einsum("bij,bj->bi", pmat, z)  # (B, D)
-    denom = beta + jnp.sum(z * pz, axis=-1)
-    gain = pz / denom[:, None]
-    theta_new = theta + gain * err[:, None]
-    pmat_new = (pmat - gain[:, :, None] * pz[:, None, :]) / beta[:, None, None]
-    pmat_new = 0.5 * (pmat_new + jnp.swapaxes(pmat_new, -1, -2))
-    return theta_new, pmat_new, pred, err
+    z = rff_features_ref(x, w, b, s)  # (B, D)
+    beta_b = jnp.broadcast_to(jnp.asarray(beta, theta.dtype), y.shape)
+    return krls_tick_math(theta, pmat, z, y, beta_b)
 
 
-def rff_krls_bank_chunk_ref(theta, pmat, xs, ys, w, b, beta, mask=None):
+def rff_krls_bank_chunk_ref(theta, pmat, xs, ys, w, b, beta, mask=None, s=None):
     """T-chunked EW-RLS oracle — for ``rff_krls_bank_chunk_pallas``.
 
     ``lax.scan`` of :func:`rff_krls_bank_step_ref` over the chunk's time
@@ -106,7 +139,7 @@ def rff_krls_bank_chunk_ref(theta, pmat, xs, ys, w, b, beta, mask=None):
         th, pm = carry
         x_t, y_t, m_t = xym
         th2, pm2, pred, err = rff_krls_bank_step_ref(
-            th, pm, x_t, y_t, w, b, beta
+            th, pm, x_t, y_t, w, b, beta, s
         )
         th = jnp.where(m_t[:, None] > 0, th2, th)
         pm = jnp.where(m_t[:, None, None] > 0, pm2, pm)

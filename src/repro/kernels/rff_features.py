@@ -1,8 +1,12 @@
-"""Pallas TPU kernel: fused RFF feature map ``sqrt(2/D) * cos(x @ W + b)``.
+"""Pallas TPU kernel: fused affine-trig feature map ``s * cos(x @ W + b)``.
 
 This is the compute hot-spot of every RFF algorithm in the paper (per-step
 cost O(D d) is *this* op), and of the RFF-attention layer (where it runs at
-(batch*seq, head_dim) x (head_dim, D) scale).
+(batch*seq, head_dim) x (head_dim, D) scale). The per-feature scale row
+``s`` (default: the Monte-Carlo ``sqrt(2/D)``) is what makes the kernel
+family-agnostic — weighted Gaussian-quadrature, QMC and orthogonal feature
+maps (repro.features) all canonicalize to this exact form, so ONE kernel
+serves every family.
 
 TPU mapping:
   * GEMM on the MXU with (block_m, block_k) x (block_k, block_n) VMEM tiles,
@@ -29,8 +33,14 @@ from jax.experimental.pallas import tpu as pltpu
 __all__ = ["rff_features_kernel", "rff_features_pallas"]
 
 
-def rff_features_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, scale: float):
-    """Grid point (i, j, k): accumulate x[i,k] @ w[k,j]; finalize on last k."""
+def rff_features_kernel(x_ref, w_ref, b_ref, s_ref, o_ref, acc_ref):
+    """Grid point (i, j, k): accumulate x[i,k] @ w[k,j]; finalize on last k.
+
+    The per-feature scale row ``s`` is applied with the bias-add/cos on the
+    last K step (VPU work, one extra (1, bn) tile in VMEM). Padded-D columns
+    carry s == 0, so their outputs are exactly 0 before the wrapper slices
+    them off.
+    """
     k = pl.program_id(2)
     nk = pl.num_programs(2)
 
@@ -47,7 +57,9 @@ def rff_features_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, scale: float):
     @pl.when(k == nk - 1)
     def _finalize():
         proj = acc_ref[...] + b_ref[...].astype(jnp.float32)
-        o_ref[...] = (scale * jnp.cos(proj)).astype(o_ref.dtype)
+        o_ref[...] = (s_ref[...].astype(jnp.float32) * jnp.cos(proj)).astype(
+            o_ref.dtype
+        )
 
 
 @functools.partial(
@@ -58,6 +70,7 @@ def rff_features_pallas(
     x: jax.Array,
     w: jax.Array,
     b: jax.Array,
+    s: jax.Array | None = None,
     *,
     block_m: int = 128,
     block_n: int = 128,
@@ -65,21 +78,28 @@ def rff_features_pallas(
     interpret: bool = False,
     out_dtype: jnp.dtype | None = None,
 ) -> jax.Array:
-    """``sqrt(2/D) cos(x @ w + b)`` via pallas_call.
+    """``s * cos(x @ w + b)`` via pallas_call.
 
     Args:
       x: ``(M, d)`` inputs (any float dtype).
       w: ``(d, D)`` spectral matrix.
       b: ``(D,)`` phases.
+      s: ``(D,)`` per-feature scales; None means the Monte-Carlo
+         ``sqrt(2/D)`` (legacy RFF behavior, bitwise unchanged).
 
     Shapes are padded up to block multiples internally (zero-padding the
-    contraction dim is exact: it adds 0 to the pre-activation).
+    contraction dim is exact: it adds 0 to the pre-activation; zero-padding
+    ``s`` zeroes padded output columns exactly).
     """
     m, d = x.shape
     d2, n = w.shape
     assert d == d2 and b.shape == (n,)
     out_dtype = out_dtype or x.dtype
-    scale = float((2.0 / n) ** 0.5)  # true D, not padded
+    if s is None:
+        # f32 regardless of w's dtype: the kernel multiplies in f32, and the
+        # legacy static-scalar scale was a full-precision python float.
+        s = jnp.full((n,), float((2.0 / n) ** 0.5), jnp.float32)  # true D
+    assert s.shape == (n,)
 
     bm, bn, bk = (min(block_m, _ceil_to(m, 8)),
                   min(block_n, _ceil_to(n, 128)),
@@ -89,21 +109,23 @@ def rff_features_pallas(
     xp = _pad2(x, mp, kp)
     wp = _pad2(w, kp, np_)
     bp = jnp.pad(b, (0, np_ - n))[None, :]  # (1, Np)
+    sp = jnp.pad(s, (0, np_ - n))[None, :]  # (1, Np), padded scales are 0
 
     grid = (mp // bm, np_ // bn, kp // bk)
     out = pl.pallas_call(
-        functools.partial(rff_features_kernel, scale=scale),
+        rff_features_kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
             pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
             pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
-    )(xp, wp, bp)
+    )(xp, wp, bp, sp)
     return out[:m, :n]
 
 

@@ -52,16 +52,20 @@ __all__ = [
 
 
 def rff_klms_step_kernel(
-    x_ref, w_ref, b_ref, theta_ref, y_ref, mu_ref, theta_out_ref, pred_ref,
-    err_ref, *, scale: float
+    x_ref, w_ref, b_ref, s_ref, theta_ref, y_ref, mu_ref, theta_out_ref,
+    pred_ref, err_ref
 ):
-    """One bank-block: featurize, predict, error, update — all in VMEM."""
+    """One bank-block: featurize, predict, error, update — all in VMEM.
+
+    ``s`` is the per-feature scale row of the canonical affine-trig form
+    (repro.features) — zero in padded-D columns, so padded z is exactly 0.
+    """
     proj = jnp.dot(
         x_ref[...].astype(jnp.float32),
         w_ref[...].astype(jnp.float32),
         preferred_element_type=jnp.float32,
     ) + b_ref[...].astype(jnp.float32)
-    z = scale * jnp.cos(proj)  # (bb, D) — never written to HBM
+    z = s_ref[...].astype(jnp.float32) * jnp.cos(proj)  # (bb, D), VMEM-only
     theta = theta_ref[...].astype(jnp.float32)
     pred = jnp.sum(theta * z, axis=1, keepdims=True)  # (bb, 1)
     err = y_ref[...].astype(jnp.float32) - pred
@@ -80,6 +84,7 @@ def rff_klms_bank_step_pallas(
     w: jax.Array,
     b: jax.Array,
     mu: jax.Array,
+    s: jax.Array | None = None,
     *,
     block_b: int = 8,
     interpret: bool = False,
@@ -93,6 +98,8 @@ def rff_klms_bank_step_pallas(
       w: ``(d, D)`` shared spectral matrix.
       b: ``(D,)`` shared phases.
       mu: scalar or ``(B,)`` per-filter step sizes.
+      s: ``(D,)`` shared per-feature scales; None = Monte-Carlo
+         ``sqrt(2/D)``.
 
     Returns:
       (theta_new ``(B, D)``, predictions ``(B,)``, prior errors ``(B,)``).
@@ -101,7 +108,9 @@ def rff_klms_bank_step_pallas(
     d = x.shape[-1]
     assert x.shape == (bsz, d) and y.shape == (bsz,)
     assert w.shape == (d, dfeat) and b.shape == (dfeat,)
-    scale = float((2.0 / dfeat) ** 0.5)  # true D, not padded
+    if s is None:
+        s = jnp.full((dfeat,), float((2.0 / dfeat) ** 0.5), jnp.float32)
+    assert s.shape == (dfeat,)
 
     bb = min(block_b, _ceil_to(bsz, 8))
     bp, dp, np_ = _ceil_to(bsz, bb), _ceil_to(d, 128), _ceil_to(dfeat, 128)
@@ -113,14 +122,16 @@ def rff_klms_bank_step_pallas(
     mu_p = jnp.pad(mu_col, (0, bp - bsz))[:, None]
     w_p = _pad2(w, dp, np_)
     b_p = jnp.pad(b, (0, np_ - dfeat))[None, :]  # (1, Np)
+    s_p = jnp.pad(s, (0, np_ - dfeat))[None, :]  # (1, Np), padded scales 0
 
     grid = (bp // bb,)
     theta_new, pred, err = pl.pallas_call(
-        functools.partial(rff_klms_step_kernel, scale=scale),
+        rff_klms_step_kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((bb, dp), lambda i: (i, 0)),
             pl.BlockSpec((dp, np_), lambda i: (0, 0)),  # grid-invariant W
+            pl.BlockSpec((1, np_), lambda i: (0, 0)),
             pl.BlockSpec((1, np_), lambda i: (0, 0)),
             pl.BlockSpec((bb, np_), lambda i: (i, 0)),
             pl.BlockSpec((bb, 1), lambda i: (i, 0)),
@@ -137,7 +148,7 @@ def rff_klms_bank_step_pallas(
             jax.ShapeDtypeStruct((bp, 1), theta.dtype),
         ],
         interpret=interpret,
-    )(x_p, w_p, b_p, theta_p, y_p, mu_p)
+    )(x_p, w_p, b_p, s_p, theta_p, y_p, mu_p)
     return theta_new[:bsz, :dfeat], pred[:bsz, 0], err[:bsz, 0]
 
 
@@ -156,8 +167,8 @@ def rff_klms_bank_step_pallas(
 
 
 def rff_klms_chunk_kernel(
-    x_ref, w_ref, b_ref, theta_ref, y_ref, mu_ref, mask_ref,
-    theta_out_ref, pred_ref, err_ref, acc_ref, *, scale: float, dfeat: int
+    x_ref, w_ref, b_ref, s_ref, theta_ref, y_ref, mu_ref, mask_ref,
+    theta_out_ref, pred_ref, err_ref, acc_ref
 ):
     """Grid point (i, t): tick t for bank block i on the resident theta tile.
 
@@ -166,10 +177,9 @@ def rff_klms_chunk_kernel(
     mask==1 the update expression multiplies by exactly 1.0, so an unmasked
     chunk is bitwise identical to T per-tick kernel calls (f32 state).
 
-    Unlike the per-tick wrapper (which slices polluted padded columns off
-    after every call), the resident theta carries across ticks, so z's
-    padded-D columns (cos(0) garbage) must be zeroed in-kernel — otherwise
-    they'd feed back into the next tick's prediction.
+    The resident theta carries across ticks, so z's padded-D columns must
+    be exactly zero — guaranteed structurally: the per-feature scale row
+    ``s`` is zero-padded, and 0 * cos(garbage) == 0.
     """
     t = pl.program_id(1)
     nt = pl.num_programs(1)
@@ -183,10 +193,7 @@ def rff_klms_chunk_kernel(
         w_ref[...].astype(jnp.float32),
         preferred_element_type=jnp.float32,
     ) + b_ref[...].astype(jnp.float32)
-    z = scale * jnp.cos(proj)  # (bb, D) — never leaves VMEM
-    if z.shape[1] > dfeat:  # static: zero padded-D columns (exact elsewhere)
-        col = jax.lax.broadcasted_iota(jnp.int32, z.shape, 1)
-        z = jnp.where(col < dfeat, z, 0.0)
+    z = s_ref[...].astype(jnp.float32) * jnp.cos(proj)  # (bb, D), VMEM-only
     theta = acc_ref[...]
     pred = jnp.sum(theta * z, axis=1, keepdims=True)  # (bb, 1)
     err = y_ref[...].astype(jnp.float32) - pred
@@ -209,6 +216,7 @@ def rff_klms_bank_chunk_pallas(
     b: jax.Array,
     mu: jax.Array,
     mask: jax.Array | None = None,
+    s: jax.Array | None = None,
     *,
     block_b: int = 8,
     interpret: bool = False,
@@ -225,6 +233,8 @@ def rff_klms_bank_chunk_pallas(
       mask: optional ``(B, T)`` validity gate (1 = apply the update); the
         masked-remainder contract of the chunked run-loops and the serve
         queue's ragged-arrival chunks.
+      s: ``(D,)`` shared per-feature scales; None = Monte-Carlo
+         ``sqrt(2/D)``.
 
     Returns:
       (theta_new ``(B, D)``, predictions ``(B, T)``, prior errors ``(B, T)``).
@@ -233,7 +243,9 @@ def rff_klms_bank_chunk_pallas(
     dfeat = theta.shape[-1]
     assert theta.shape == (bsz, dfeat) and ys.shape == (bsz, tlen)
     assert w.shape == (d, dfeat) and b.shape == (dfeat,)
-    scale = float((2.0 / dfeat) ** 0.5)  # true D, not padded
+    if s is None:
+        s = jnp.full((dfeat,), float((2.0 / dfeat) ** 0.5), jnp.float32)
+    assert s.shape == (dfeat,)
 
     bb = min(block_b, _ceil_to(bsz, 8))
     bp, dp, np_ = _ceil_to(bsz, bb), _ceil_to(d, 128), _ceil_to(dfeat, 128)
@@ -248,14 +260,16 @@ def rff_klms_bank_chunk_pallas(
     mu_p = jnp.pad(mu_col, (0, bp - bsz))[:, None]
     w_p = _pad2(w, dp, np_)
     b_p = jnp.pad(b, (0, np_ - dfeat))[None, :]  # (1, Np)
+    s_p = jnp.pad(s, (0, np_ - dfeat))[None, :]  # (1, Np), padded scales 0
 
     grid = (bp // bb, tlen)  # t minor: theta tile resident across the chunk
     theta_new, pred, err = pl.pallas_call(
-        functools.partial(rff_klms_chunk_kernel, scale=scale, dfeat=dfeat),
+        rff_klms_chunk_kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((bb, 1, dp), lambda i, t: (i, t, 0)),
             pl.BlockSpec((dp, np_), lambda i, t: (0, 0)),  # grid-invariant W
+            pl.BlockSpec((1, np_), lambda i, t: (0, 0)),
             pl.BlockSpec((1, np_), lambda i, t: (0, 0)),
             pl.BlockSpec((bb, np_), lambda i, t: (i, 0)),
             pl.BlockSpec((bb, 1), lambda i, t: (i, t)),
@@ -274,5 +288,5 @@ def rff_klms_bank_chunk_pallas(
         ],
         scratch_shapes=[pltpu.VMEM((bb, np_), jnp.float32)],
         interpret=interpret,
-    )(xs_p, w_p, b_p, theta_p, ys_p, mu_p, mask_p)
+    )(xs_p, w_p, b_p, s_p, theta_p, ys_p, mu_p, mask_p)
     return theta_new[:bsz, :dfeat], pred[:bsz], err[:bsz]

@@ -58,17 +58,21 @@ __all__ = [
 
 
 def rff_krls_step_kernel(
-    x_ref, w_ref, b_ref, theta_ref, p_ref, y_ref, beta_ref,
-    theta_out_ref, p_out_ref, pred_ref, err_ref, *, scale: float
+    x_ref, w_ref, b_ref, s_ref, theta_ref, p_ref, y_ref, beta_ref,
+    theta_out_ref, p_out_ref, pred_ref, err_ref
 ):
-    """One tenant: featurize, predict, full RLS downdate — all in VMEM."""
+    """One tenant: featurize, predict, full RLS downdate — all in VMEM.
+
+    ``s`` is the per-feature scale row of the canonical affine-trig form
+    (repro.features) — zero in padded-D columns, so padded z is exactly 0.
+    """
     f32 = jnp.float32
     proj = jnp.dot(
         x_ref[...].astype(f32),
         w_ref[...].astype(f32),
         preferred_element_type=f32,
     ) + b_ref[...].astype(f32)
-    z = scale * jnp.cos(proj)  # (1, D) — never written to HBM
+    z = s_ref[...].astype(f32) * jnp.cos(proj)  # (1, D), VMEM-only
     theta = theta_ref[...].astype(f32)  # (1, D)
     pred = jnp.sum(theta * z, axis=1, keepdims=True)  # (1, 1)
     err = y_ref[...].astype(f32) - pred
@@ -105,6 +109,7 @@ def rff_krls_bank_step_pallas(
     w: jax.Array,
     b: jax.Array,
     beta: jax.Array,
+    s: jax.Array | None = None,
     *,
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
@@ -118,6 +123,8 @@ def rff_krls_bank_step_pallas(
       w: ``(d, D)`` shared spectral matrix.
       b: ``(D,)`` shared phases.
       beta: scalar or ``(B,)`` per-tenant forgetting factors.
+      s: ``(D,)`` shared per-feature scales; None = Monte-Carlo
+         ``sqrt(2/D)``.
 
     Returns:
       (theta_new ``(B, D)``, pmat_new ``(B, D, D)``, predictions ``(B,)``,
@@ -128,7 +135,9 @@ def rff_krls_bank_step_pallas(
     assert pmat.shape == (bsz, dfeat, dfeat)
     assert x.shape == (bsz, d) and y.shape == (bsz,)
     assert w.shape == (d, dfeat) and b.shape == (dfeat,)
-    scale = float((2.0 / dfeat) ** 0.5)  # true D, not padded
+    if s is None:
+        s = jnp.full((dfeat,), float((2.0 / dfeat) ** 0.5), jnp.float32)
+    assert s.shape == (dfeat,)
 
     dp, np_ = _ceil_to(d, 128), _ceil_to(dfeat, 128)
     beta_col = jnp.broadcast_to(jnp.asarray(beta, theta.dtype), (bsz,))
@@ -142,14 +151,16 @@ def rff_krls_bank_step_pallas(
     beta_p = beta_col[:, None]
     w_p = _pad2(w, dp, np_)
     b_p = jnp.pad(b, (0, np_ - dfeat))[None, :]  # (1, Np)
+    s_p = jnp.pad(s, (0, np_ - dfeat))[None, :]  # (1, Np), padded scales 0
 
     grid = (bsz,)
     theta_new, p_new, pred, err = pl.pallas_call(
-        functools.partial(rff_krls_step_kernel, scale=scale),
+        rff_krls_step_kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, dp), lambda i: (i, 0)),
             pl.BlockSpec((dp, np_), lambda i: (0, 0)),  # grid-invariant W
+            pl.BlockSpec((1, np_), lambda i: (0, 0)),
             pl.BlockSpec((1, np_), lambda i: (0, 0)),
             pl.BlockSpec((1, np_), lambda i: (i, 0)),
             pl.BlockSpec((1, np_, np_), lambda i: (i, 0, 0)),
@@ -169,7 +180,7 @@ def rff_krls_bank_step_pallas(
             jax.ShapeDtypeStruct((bsz, 1), theta.dtype),
         ],
         interpret=interpret,
-    )(x_p, w_p, b_p, theta_p, p_p, y_p, beta_p)
+    )(x_p, w_p, b_p, s_p, theta_p, p_p, y_p, beta_p)
     return (
         theta_new[:, :dfeat],
         p_new[:, :dfeat, :dfeat],
@@ -193,14 +204,15 @@ def rff_krls_bank_step_pallas(
 
 
 def rff_krls_chunk_kernel(
-    x_ref, w_ref, b_ref, theta_ref, p_ref, y_ref, beta_ref, mask_ref,
-    theta_out_ref, p_out_ref, pred_ref, err_ref, th_acc, p_acc,
-    *, scale: float
+    x_ref, w_ref, b_ref, s_ref, theta_ref, p_ref, y_ref, beta_ref, mask_ref,
+    theta_out_ref, p_out_ref, pred_ref, err_ref, th_acc, p_acc
 ):
     """Grid point (i, t): tick t for tenant i on the resident theta/P tiles.
 
     ``mask`` gates the state update only (masked ticks emit predictions but
     change nothing); with mask==1 each tick is the per-tick kernel verbatim.
+    Padded-D columns of z are exactly zero (zero-padded scale row ``s``), so
+    the resident P never accumulates garbage outside the true D block.
     """
     f32 = jnp.float32
     t = pl.program_id(1)
@@ -216,7 +228,7 @@ def rff_krls_chunk_kernel(
         w_ref[...].astype(f32),
         preferred_element_type=f32,
     ) + b_ref[...].astype(f32)
-    z = scale * jnp.cos(proj)  # (1, D) — never leaves VMEM
+    z = s_ref[...].astype(f32) * jnp.cos(proj)  # (1, D), VMEM-only
     theta = th_acc[...]  # (1, D)
     pred = jnp.sum(theta * z, axis=1, keepdims=True)  # (1, 1)
     err = y_ref[...].astype(f32) - pred
@@ -256,6 +268,7 @@ def rff_krls_bank_chunk_pallas(
     b: jax.Array,
     beta: jax.Array,
     mask: jax.Array | None = None,
+    s: jax.Array | None = None,
     *,
     interpret: bool = False,
 ) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
@@ -270,6 +283,8 @@ def rff_krls_bank_chunk_pallas(
       b: ``(D,)`` shared phases.
       beta: scalar or ``(B,)`` per-tenant forgetting factors.
       mask: optional ``(B, T)`` validity gate (1 = apply the update).
+      s: ``(D,)`` shared per-feature scales; None = Monte-Carlo
+         ``sqrt(2/D)``.
 
     Returns:
       (theta_new ``(B, D)``, pmat_new ``(B, D, D)``, predictions ``(B, T)``,
@@ -280,7 +295,9 @@ def rff_krls_bank_chunk_pallas(
     assert theta.shape == (bsz, dfeat)
     assert pmat.shape == (bsz, dfeat, dfeat) and ys.shape == (bsz, tlen)
     assert w.shape == (d, dfeat) and b.shape == (dfeat,)
-    scale = float((2.0 / dfeat) ** 0.5)  # true D, not padded
+    if s is None:
+        s = jnp.full((dfeat,), float((2.0 / dfeat) ** 0.5), jnp.float32)
+    assert s.shape == (dfeat,)
 
     dp, np_ = _ceil_to(d, 128), _ceil_to(dfeat, 128)
     beta_col = jnp.broadcast_to(jnp.asarray(beta, theta.dtype), (bsz,))
@@ -294,14 +311,16 @@ def rff_krls_bank_chunk_pallas(
     mask_p = mask.astype(theta.dtype)
     w_p = _pad2(w, dp, np_)
     b_p = jnp.pad(b, (0, np_ - dfeat))[None, :]  # (1, Np)
+    s_p = jnp.pad(s, (0, np_ - dfeat))[None, :]  # (1, Np), padded scales 0
 
     grid = (bsz, tlen)  # t minor: theta/P tiles resident across the chunk
     theta_new, p_new, pred, err = pl.pallas_call(
-        functools.partial(rff_krls_chunk_kernel, scale=scale),
+        rff_krls_chunk_kernel,
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, 1, dp), lambda i, t: (i, t, 0)),
             pl.BlockSpec((dp, np_), lambda i, t: (0, 0)),  # grid-invariant W
+            pl.BlockSpec((1, np_), lambda i, t: (0, 0)),
             pl.BlockSpec((1, np_), lambda i, t: (0, 0)),
             pl.BlockSpec((1, np_), lambda i, t: (i, 0)),
             pl.BlockSpec((1, np_, np_), lambda i, t: (i, 0, 0)),
@@ -326,7 +345,7 @@ def rff_krls_bank_chunk_pallas(
             pltpu.VMEM((np_, np_), jnp.float32),
         ],
         interpret=interpret,
-    )(xs_p, w_p, b_p, theta_p, p_p, ys, beta_p, mask_p)
+    )(xs_p, w_p, b_p, s_p, theta_p, p_p, ys, beta_p, mask_p)
     return (
         theta_new[:, :dfeat],
         p_new[:, :dfeat, :dfeat],

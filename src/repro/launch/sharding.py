@@ -288,8 +288,14 @@ def krls_state_shardings(mesh: Mesh, axis: str | None = None):
 
 
 def krls_feature_shardings(mesh: Mesh, axis: str | None = None):
-    """NamedShardings for the RFF bank: omega/bias column-partitioned so
-    each shard featurizes exactly its P row block's slice."""
+    """NamedShardings for the canonical trig feature bank
+    (``repro.features.TrigFeatures``): omega/bias/scale column-partitioned
+    so each shard featurizes exactly its P row block's slice.
+
+    The targets follow the 3-leaf canonical form — canonicalize a legacy
+    ``RFF`` struct with ``repro.features.as_trig`` before ``device_put``
+    against these shardings (or use ``core.krls.shard_krls_rff``, which
+    does both)."""
     from repro.core.krls import KRLS_SHARD_AXIS, krls_feature_specs
 
     specs = krls_feature_specs(axis or KRLS_SHARD_AXIS)

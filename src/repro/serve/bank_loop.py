@@ -13,6 +13,11 @@ reused every tick); ``serve_bank_stream`` scans a whole ``(B, n)`` traffic
 matrix through it under a single jit — the benchmark's "≥64 concurrent
 streams, one jitted call" path.
 
+Every server accepts any :mod:`repro.features` map — deterministic GQ/QMC
+families give variance-free serving (two replicas constructed from the same
+config predict identically, no seed coordination needed); non-trig families
+run through the generic bank fallback automatically.
+
 KRLS tenants (``make_krls_bank_server`` / ``serve_krls_bank_stream``) get
 the same treatment through the fused RLS bank kernel: per-tenant state is a
 ``(D,)`` theta plus a ``(D, D)`` inverse correlation, still fixed-size, so
@@ -35,7 +40,7 @@ from repro.core.bank import (
 )
 from repro.core.klms import LMSState, StepOut
 from repro.core.krls import RLSState
-from repro.core.rff import RFF
+from repro.features.base import FeatureLike
 
 __all__ = [
     "make_bank_server",
@@ -48,7 +53,7 @@ __all__ = [
 
 
 def make_bank_server(
-    rff: RFF, mu: Union[float, jax.Array], mode: str = "auto"
+    rff: FeatureLike, mu: Union[float, jax.Array], mode: str = "auto"
 ) -> Callable[[LMSState, jax.Array, jax.Array], tuple[LMSState, StepOut]]:
     """Build the jitted per-tick server: ``(state, xs (B,d), ys (B,)) ->
     (state, StepOut)``. Compile once, call per tick."""
@@ -62,7 +67,7 @@ def make_bank_server(
 
 @functools.partial(jax.jit, static_argnames=("mode", "chunk"))
 def serve_bank_stream(
-    rff: RFF,
+    rff: FeatureLike,
     xs: jax.Array,
     ys: jax.Array,
     mu: Union[float, jax.Array],
@@ -90,7 +95,7 @@ def reset_tenants(state: LMSState, slots: jax.Array) -> LMSState:
 
 
 def make_krls_bank_server(
-    rff: RFF, beta: Union[float, jax.Array] = 0.9995, mode: str = "auto"
+    rff: FeatureLike, beta: Union[float, jax.Array] = 0.9995, mode: str = "auto"
 ) -> Callable[[RLSState, jax.Array, jax.Array], tuple[RLSState, StepOut]]:
     """Jitted per-tick KRLS server: ``(state, xs (B,d), ys (B,)) ->
     (state, StepOut)`` through the fused RLS bank kernel."""
@@ -104,7 +109,7 @@ def make_krls_bank_server(
 
 @functools.partial(jax.jit, static_argnames=("mode", "chunk"))
 def serve_krls_bank_stream(
-    rff: RFF,
+    rff: FeatureLike,
     xs: jax.Array,
     ys: jax.Array,
     lam: float = 1e-4,

@@ -35,7 +35,7 @@ from repro.core.bank import (
     krls_bank_chunk_step,
     krls_bank_init,
 )
-from repro.core.rff import RFF
+from repro.features.base import FeatureLike, input_dim
 
 __all__ = [
     "MicroBatchQueue",
@@ -47,7 +47,7 @@ __all__ = [
 
 
 def make_chunked_bank_server(
-    rff: RFF,
+    rff: FeatureLike,
     mu: Union[float, jax.Array],
     mode: str = "auto",
 ) -> Callable:
@@ -62,7 +62,7 @@ def make_chunked_bank_server(
 
 
 def make_chunked_krls_bank_server(
-    rff: RFF,
+    rff: FeatureLike,
     beta: Union[float, jax.Array] = 0.9995,
     mode: str = "auto",
 ) -> Callable:
@@ -156,7 +156,7 @@ class MicroBatchQueue:
 
 
 def klms_micro_batch_queue(
-    rff: RFF,
+    rff: FeatureLike,
     num_tenants: int,
     mu: Union[float, jax.Array] = 0.5,
     chunk: int = 16,
@@ -169,13 +169,13 @@ def klms_micro_batch_queue(
     return MicroBatchQueue(
         make_chunked_bank_server(rff, mu, mode=mode),
         state,
-        rff.input_dim,
+        input_dim(rff),
         chunk=chunk,
     )
 
 
 def krls_micro_batch_queue(
-    rff: RFF,
+    rff: FeatureLike,
     num_tenants: int,
     lam: Union[float, jax.Array] = 1e-4,
     beta: Union[float, jax.Array] = 0.9995,
@@ -189,6 +189,6 @@ def krls_micro_batch_queue(
     return MicroBatchQueue(
         make_chunked_krls_bank_server(rff, beta, mode=mode),
         state,
-        rff.input_dim,
+        input_dim(rff),
         chunk=chunk,
     )

@@ -1,0 +1,396 @@
+"""Feature-map subsystem: every family behind one contract.
+
+Contracts pinned here:
+* Each trig family's ``featurize`` IS its canonical ``(W, b, scale)`` form,
+  and canonicalizing the legacy ``RFF`` struct changes nothing (bitwise).
+* Deterministic families (qmc/gq/taylor) ignore PRNG keys entirely —
+  bitwise identical across constructions — and reach the Monte-Carlo error
+  floor at equal or smaller D.
+* The fused + chunked Pallas kernels (interpret mode) match the reference
+  oracle for every trig family — one kernel serves all of them.
+* Learner adapters and bank tiers accept any family, including the
+  non-trig Taylor map (generic fallback).
+* The mixed-family bank matches sequential single-tenant runs.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import features as F
+from repro.core.bank import (
+    bank_hparams,
+    bank_init,
+    bank_run,
+    klms_bank_run,
+    krls_bank_run,
+    mixed_klms_bank_run,
+    mixed_krls_bank_run,
+    stack_feature_maps,
+)
+from repro.core.klms import rff_klms_run
+from repro.core.krls import rff_krls_run
+from repro.core.learner import klms_learner, krls_learner
+from repro.core.rff import gaussian_kernel, rff_features, sample_rff
+from repro.data.synthetic import gen_chaotic1
+from repro.kernels import ops
+
+TRIG_FAMILIES = ("rff", "orf", "qmc", "gq")
+DET_FAMILIES = ("qmc", "gq", "taylor")
+
+
+def _make(family, d=3, D=128, sigma=1.5, key=None):
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    return F.make_feature_map(family, d, D, sigma, key=key)
+
+
+# ---------------------------------------------------------------------------
+# Contract and canonical form
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("family", F.FAMILIES)
+def test_contract_metadata(family):
+    fm = _make(family)
+    assert fm.family == family
+    assert fm.input_dim == 3
+    assert fm.num_features >= 1
+    x = jax.random.normal(jax.random.PRNGKey(1), (7, 3))
+    z = F.featurize(fm, x)
+    assert z.shape == (7, fm.num_features)
+    w = fm.weights
+    assert w.shape == (fm.num_features,)
+    assert bool(jnp.all(w >= 0))
+    assert fm.deterministic == (family in DET_FAMILIES)
+
+
+@pytest.mark.parametrize("family", TRIG_FAMILIES)
+def test_trig_families_featurize_via_canonical_form(family):
+    """featurize == scale * cos(x @ W + b) for every trig family, bitwise."""
+    fm = _make(family)
+    tf = F.as_trig(fm)
+    x = jax.random.normal(jax.random.PRNGKey(2), (5, 3))
+    np.testing.assert_array_equal(
+        np.asarray(F.featurize(fm, x)), np.asarray(F.trig_features(tf, x))
+    )
+
+
+def test_rff_canonicalization_is_bitwise_legacy():
+    """trig_from_rff(RFF) featurizes bitwise like core.rff.rff_features."""
+    rff = sample_rff(jax.random.PRNGKey(0), 4, 300, 2.0)
+    tf = F.trig_from_rff(rff)
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, 4))
+    np.testing.assert_array_equal(
+        np.asarray(rff_features(rff, x)), np.asarray(F.trig_features(tf, x))
+    )
+
+
+def test_taylor_has_no_trig_form():
+    fm = _make("taylor")
+    assert F.as_trig_or_none(fm) is None
+    with pytest.raises(TypeError, match="taylor"):
+        F.as_trig(fm)
+
+
+@pytest.mark.parametrize("family", F.FAMILIES)
+def test_feature_map_is_pytree(family):
+    """FeatureMap flows through tree_flatten/jit/vmap like any param struct."""
+    fm = _make(family)
+    leaves, treedef = jax.tree_util.tree_flatten(fm)
+    fm2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    x = jax.random.normal(jax.random.PRNGKey(3), (4, 3))
+    jitted = jax.jit(lambda m, a: F.featurize(m, a))
+    np.testing.assert_array_equal(
+        np.asarray(jitted(fm2, x)), np.asarray(jitted(fm, x))
+    )
+
+
+# ---------------------------------------------------------------------------
+# Determinism and accuracy
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("family", DET_FAMILIES)
+def test_deterministic_families_ignore_keys(family):
+    """Two constructions under different keys are bitwise identical."""
+    a = _make(family, key=jax.random.PRNGKey(0))
+    b = _make(family, key=jax.random.PRNGKey(12345))
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+@pytest.mark.parametrize("family", F.FAMILIES)
+def test_kernel_estimate_accuracy(family):
+    """z(x).z(y) approximates the Gaussian kernel; deterministic families
+    reach the D=256 Monte-Carlo floor already (qmc/gq/taylor <= rff)."""
+    d, sigma, D = 3, 1.5, 256
+    fm = _make(family, d=d, D=D, sigma=sigma)
+    x = jax.random.normal(jax.random.PRNGKey(1), (128, d))
+    y = jax.random.normal(jax.random.PRNGKey(2), (128, d))
+    exact = gaussian_kernel(x, y, sigma)
+    zx, zy = F.featurize(fm, x), F.featurize(fm, y)
+    rmse = float(jnp.sqrt(jnp.mean((jnp.sum(zx * zy, -1) - exact) ** 2)))
+    assert rmse < 0.08, f"{family}: rmse {rmse}"
+    if family in DET_FAMILIES:
+        rff_fm = _make("rff", d=d, D=D, sigma=sigma)
+        zx_r = F.featurize(rff_fm, x)
+        zy_r = F.featurize(rff_fm, y)
+        rmse_rff = float(
+            jnp.sqrt(jnp.mean((jnp.sum(zx_r * zy_r, -1) - exact) ** 2))
+        )
+        assert rmse <= rmse_rff, f"{family} {rmse} vs rff {rmse_rff}"
+
+
+def test_gq_weights_sum_to_one():
+    """Retained node weights renormalize so kappa(0) == 1 exactly: each
+    node's weight appears in its cos AND sin feature (sum(scale^2) == 2)
+    and cos^2 + sin^2 collapses the pair to one a_j."""
+    fm = _make("gq", d=2, D=64)
+    assert abs(float(jnp.sum(fm.weights)) - 2.0) < 1e-6
+    x = jax.random.normal(jax.random.PRNGKey(1), (8, 2))
+    z = F.featurize(fm, x)
+    # cos^2 + sin^2 = 1 per node: ||z(x)||^2 == sum a_j == 1 up to rounding
+    np.testing.assert_allclose(
+        np.asarray(jnp.sum(z * z, -1)), np.ones(8), atol=1e-5
+    )
+
+
+def test_qmc_even_d_required():
+    with pytest.raises(ValueError, match="even"):
+        F.qmc_map(3, 65, 1.0)
+    with pytest.raises(ValueError, match="even"):
+        F.gq_map(3, 65, 1.0)
+
+
+def test_taylor_num_features_formula():
+    fm = F.taylor_map(3, 4, 1.0)
+    assert fm.num_features == F.taylor_num_features(3, 4)
+    # degree auto-pick: largest degree fitting the budget
+    fm2 = F.make_feature_map("taylor", 3, 128, 1.0)
+    assert fm2.num_features <= 128
+
+
+# ---------------------------------------------------------------------------
+# One kernel serves every trig family (fused + chunked, interpret mode)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("family", TRIG_FAMILIES)
+def test_features_kernel_all_families(family):
+    """The Pallas feature kernel (interpret) == oracle for every family."""
+    fm = _make(family, d=5, D=192, sigma=2.0)
+    tf = F.as_trig(fm)
+    x = jax.random.normal(jax.random.PRNGKey(4), (33, 5))
+    got = ops.rff_features(x, tf.omega, tf.bias, tf.scale, mode="interpret")
+    want = F.trig_features(tf, x)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), atol=1e-5, rtol=1e-5
+    )
+
+
+@pytest.mark.parametrize("family", TRIG_FAMILIES)
+def test_fused_klms_step_and_chunk_all_families(family):
+    """Fused + chunked KLMS Pallas paths (interpret) == oracle, any family."""
+    fm = _make(family, d=4, D=96, sigma=1.5)
+    tf = F.as_trig(fm)
+    ks = jax.random.split(jax.random.PRNGKey(5), 4)
+    bank, tlen = 6, 5
+    theta = jax.random.normal(ks[0], (bank, 96))
+    xs = jax.random.normal(ks[1], (bank, tlen, 4))
+    ys = jax.random.normal(ks[2], (bank, tlen))
+    mu = jax.random.uniform(ks[3], (bank,), minval=0.1, maxval=1.0)
+
+    got = ops.rff_klms_bank_step(
+        theta, xs[:, 0], ys[:, 0], tf.omega, tf.bias, mu, tf.scale,
+        mode="interpret",
+    )
+    want = ops.rff_klms_bank_step(
+        theta, xs[:, 0], ys[:, 0], tf.omega, tf.bias, mu, tf.scale,
+        mode="xla",
+    )
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), atol=1e-5)
+
+    got = ops.rff_klms_bank_chunk(
+        theta, xs, ys, tf.omega, tf.bias, mu, None, tf.scale,
+        mode="interpret",
+    )
+    want = ops.rff_klms_bank_chunk(
+        theta, xs, ys, tf.omega, tf.bias, mu, None, tf.scale, mode="xla"
+    )
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), atol=1e-5)
+
+
+@pytest.mark.parametrize("family", TRIG_FAMILIES)
+def test_fused_krls_step_and_chunk_all_families(family):
+    """Fused + chunked EW-RLS Pallas paths (interpret) == oracle, any
+    family — the per-feature quadrature weights ride through the full RLS
+    downdate."""
+    fm = _make(family, d=3, D=64, sigma=1.5)
+    tf = F.as_trig(fm)
+    ks = jax.random.split(jax.random.PRNGKey(6), 4)
+    bank, tlen = 3, 4
+    theta = 0.1 * jax.random.normal(ks[0], (bank, 64))
+    pmat = jnp.broadcast_to(jnp.eye(64) * 10.0, (bank, 64, 64))
+    xs = jax.random.normal(ks[1], (bank, tlen, 3))
+    ys = jax.random.normal(ks[2], (bank, tlen))
+    beta = jnp.asarray(0.999)
+
+    got = ops.rff_krls_bank_step(
+        theta, pmat, xs[:, 0], ys[:, 0], tf.omega, tf.bias, beta, tf.scale,
+        mode="interpret",
+    )
+    want = ops.rff_krls_bank_step(
+        theta, pmat, xs[:, 0], ys[:, 0], tf.omega, tf.bias, beta, tf.scale,
+        mode="xla",
+    )
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), atol=1e-4)
+
+    got = ops.rff_krls_bank_chunk(
+        theta, pmat, xs, ys, tf.omega, tf.bias, beta, None, tf.scale,
+        mode="interpret",
+    )
+    want = ops.rff_krls_bank_chunk(
+        theta, pmat, xs, ys, tf.omega, tf.bias, beta, None, tf.scale,
+        mode="xla",
+    )
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Learners and banks accept every family
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("family", F.FAMILIES)
+def test_learner_adapters_any_family(family):
+    """klms/krls adapters learn the chaotic-series task with any family."""
+    xs, ys = gen_chaotic1(jax.random.PRNGKey(7), num_samples=400)
+    fm = _make(family, d=2, D=64, sigma=0.5)
+    for make in (lambda: klms_learner(fm, 0.5), lambda: krls_learner(fm)):
+        learner = make()
+        state, out = learner.run(None, xs, ys)
+        head = float(jnp.mean(out.error[:50] ** 2))
+        tail = float(jnp.mean(out.error[-100:] ** 2))
+        assert np.isfinite(tail) and tail < head, f"{family}: {head}->{tail}"
+        pred = learner.predict(state, xs[-1])
+        assert np.isfinite(float(pred))
+
+
+@pytest.mark.parametrize("family", ("gq", "taylor"))
+def test_deterministic_learners_bitwise_across_seeds(family):
+    """GQ/Taylor learner trajectories are bitwise seed-independent."""
+    xs, ys = gen_chaotic1(jax.random.PRNGKey(8), num_samples=200)
+    runs = []
+    for seed in (0, 99):
+        fm = _make(family, d=2, D=64, sigma=0.5, key=jax.random.PRNGKey(seed))
+        _, out = klms_learner(fm, 0.5).run(None, xs, ys)
+        runs.append(np.asarray(out.error))
+    np.testing.assert_array_equal(runs[0], runs[1])
+
+
+def test_taylor_through_fused_bank_tiers():
+    """Non-trig Taylor runs through klms/krls bank tiers (generic fallback)
+    and matches the vmapped OnlineLearner bank (same update math)."""
+    fm = _make("taylor", d=2, D=64, sigma=1.0)
+    xs, ys = gen_chaotic1(jax.random.PRNGKey(9), num_samples=120)
+    bank, n = 3, 40
+    xb = xs[: bank * n].reshape(bank, n, -1)
+    yb = ys[: bank * n].reshape(bank, n)
+
+    _, out_fused = klms_bank_run(fm, xb, yb, 0.5)
+    learner = klms_learner(fm, 0.5)
+    _, out_generic = bank_run(learner, bank_init(learner, bank), xb, yb)
+    np.testing.assert_allclose(
+        np.asarray(out_fused.error), np.asarray(out_generic.error), atol=1e-6
+    )
+    # chunked path agrees as well (scan reschedule only)
+    _, out_chunk = klms_bank_run(fm, xb, yb, 0.5, chunk=16)
+    np.testing.assert_allclose(
+        np.asarray(out_fused.error), np.asarray(out_chunk.error), atol=1e-6
+    )
+
+    _, out_krls = krls_bank_run(fm, xb, yb, lam=1e-2)
+    klearner = krls_learner(fm, lam=1e-2)
+    _, out_krls_gen = bank_run(klearner, bank_init(klearner, bank), xb, yb)
+    np.testing.assert_allclose(
+        np.asarray(out_krls.error), np.asarray(out_krls_gen.error), atol=1e-4
+    )
+
+
+# ---------------------------------------------------------------------------
+# Mixed-family bank: per-tenant feature maps + per-tenant hyperparams
+# ---------------------------------------------------------------------------
+
+
+def test_mixed_bank_heterogeneous_families_klms():
+    """One bank mixing rff/gq/qmc/orf tenants (per-tenant BankHParams)
+    matches each tenant's sequential single-tenant run."""
+    d, D, n = 2, 64, 120
+    fms = [
+        _make("rff", d=d, D=D, sigma=0.5, key=jax.random.PRNGKey(1)),
+        _make("gq", d=d, D=D, sigma=0.5),
+        _make("qmc", d=d, D=D, sigma=0.5),
+        _make("orf", d=d, D=D, sigma=0.5, key=jax.random.PRNGKey(2)),
+    ]
+    tfs = stack_feature_maps(fms)
+    xs, ys = gen_chaotic1(jax.random.PRNGKey(10), num_samples=4 * n)
+    xb = xs[: 4 * n].reshape(4, n, -1)
+    yb = ys[: 4 * n].reshape(4, n)
+    hp = bank_hparams(4, mu=jnp.asarray([0.5, 0.3, 0.7, 0.4]))
+
+    state, out = mixed_klms_bank_run(tfs, xb, yb, hparams=hp)
+    for i, fm in enumerate(fms):
+        _, want = rff_klms_run(fm, xb[i], yb[i], float(hp.mu[i]))
+        np.testing.assert_allclose(
+            np.asarray(out.error[i]), np.asarray(want.error), atol=1e-5
+        )
+
+
+def test_mixed_bank_heterogeneous_families_krls():
+    """Mixed rff/gq KRLS tenants with per-tenant (beta, lam) match their
+    sequential runs to the bank tier's f32 drift bound."""
+    d, D, n = 2, 48, 80
+    fms = [
+        _make("rff", d=d, D=D, sigma=0.5, key=jax.random.PRNGKey(3)),
+        _make("gq", d=d, D=D, sigma=0.5),
+    ]
+    tfs = stack_feature_maps(fms)
+    xs, ys = gen_chaotic1(jax.random.PRNGKey(11), num_samples=2 * n)
+    xb = xs[: 2 * n].reshape(2, n, -1)
+    yb = ys[: 2 * n].reshape(2, n)
+    hp = bank_hparams(
+        2, beta=jnp.asarray([0.999, 0.9995]), lam=jnp.asarray([1e-2, 1e-3])
+    )
+
+    state, out = mixed_krls_bank_run(tfs, xb, yb, hparams=hp)
+    for i, fm in enumerate(fms):
+        _, want = rff_krls_run(
+            fm, xb[i], yb[i], float(hp.lam[i]), float(hp.beta[i])
+        )
+        np.testing.assert_allclose(
+            np.asarray(out.error[i]), np.asarray(want.error), atol=1e-3
+        )
+
+
+def test_stack_feature_maps_shape_mismatch():
+    a = _make("gq", d=2, D=64)
+    b = _make("gq", d=2, D=32)
+    with pytest.raises(ValueError, match="share"):
+        stack_feature_maps([a, b])
+
+
+def test_kernel_estimate_same_object_fast_path():
+    """kernel_estimate(rff, x, x) == kappa(0) path computes features once
+    and agrees with the two-argument route."""
+    from repro.core.rff import kernel_estimate
+
+    rff = sample_rff(jax.random.PRNGKey(0), 3, 128, 1.0)
+    x = jax.random.normal(jax.random.PRNGKey(1), (9, 3))
+    same = kernel_estimate(rff, x, x)
+    copy = kernel_estimate(rff, x, jnp.array(x))
+    np.testing.assert_allclose(np.asarray(same), np.asarray(copy), atol=1e-6)

@@ -107,3 +107,74 @@ def test_data_pipeline_seekable(seed, steps):
     b = batch_at_step(seed, steps, global_batch=2, seq_len=8, vocab=97)
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
     assert int(a.max()) < 97 and int(a.min()) >= 0
+
+
+# ---------------------------------------------------------------------------
+# Feature-map subsystem invariants (repro.features)
+# ---------------------------------------------------------------------------
+
+
+@given(
+    seed_a=st.integers(0, 2**16),
+    seed_b=st.integers(0, 2**16),
+    family=st.sampled_from(["gq", "taylor"]),
+    sigma=st.floats(0.8, 4.0),
+)
+@settings(**_settings)
+def test_deterministic_features_key_insensitive(seed_a, seed_b, family, sigma):
+    """GQ/Taylor kernel estimates are a pure function of (d, D, sigma):
+    construction keys change NOTHING (bitwise) — the zero-seed-variance
+    property that lets serving replicas skip seed coordination."""
+    from repro.features import featurize, make_feature_map
+
+    fa = make_feature_map(family, 2, 32, sigma, key=jax.random.PRNGKey(seed_a))
+    fb = make_feature_map(family, 2, 32, sigma, key=jax.random.PRNGKey(seed_b))
+    x = jax.random.normal(jax.random.PRNGKey(seed_a + 1), (4, 2))
+    y = jax.random.normal(jax.random.PRNGKey(seed_b + 2), (4, 2))
+    ka = jnp.sum(featurize(fa, x) * featurize(fa, y), axis=-1)
+    kb = jnp.sum(featurize(fb, x) * featurize(fb, y), axis=-1)
+    np.testing.assert_array_equal(np.asarray(ka), np.asarray(kb))
+
+
+@given(seed=st.integers(0, 2**16), d=st.integers(2, 6))
+@settings(**_settings)
+def test_orf_blocks_exactly_orthogonal(seed, d):
+    """ORF omega columns within each QR block are exactly orthogonal (up to
+    f32 QR rounding) — the structural property that cuts MC variance."""
+    from repro.features import as_trig, orf_map
+
+    D = 2 * d  # two full blocks
+    fm = orf_map(jax.random.PRNGKey(seed), d, D, 1.5)
+    omega = np.asarray(as_trig(fm).omega)  # (d, D)
+    for blk in range(2):
+        cols = omega[:, blk * d : (blk + 1) * d]
+        gram = cols.T @ cols
+        off = gram - np.diag(np.diag(gram))
+        scale = np.abs(gram).max()
+        assert np.abs(off).max() <= 1e-5 * max(scale, 1.0)
+
+
+@given(
+    family=st.sampled_from(["gq", "taylor", "qmc"]),
+    sigma=st.floats(1.0, 3.0),
+    seed=st.integers(0, 2**16),
+)
+@settings(**_settings)
+def test_deterministic_estimates_converge_to_gaussian_kernel(
+    family, sigma, seed
+):
+    """GQ/Taylor/QMC estimates approach the exact Gaussian kernel as the
+    feature budget grows (truncation error is monotone in D here)."""
+    from repro.core.rff import gaussian_kernel
+    from repro.features import featurize, make_feature_map
+
+    x = 0.8 * jax.random.normal(jax.random.PRNGKey(seed), (16, 2))
+    y = 0.8 * jax.random.normal(jax.random.PRNGKey(seed + 1), (16, 2))
+    exact = gaussian_kernel(x, y, sigma)
+    errs = []
+    for D in (16, 256):
+        fm = make_feature_map(family, 2, D, sigma)
+        est = jnp.sum(featurize(fm, x) * featurize(fm, y), axis=-1)
+        errs.append(float(jnp.max(jnp.abs(est - exact))))
+    assert errs[1] <= errs[0] + 1e-6
+    assert errs[1] < 0.05
