@@ -15,6 +15,12 @@ root, next to this package) with a stable schema::
 The committed copies at the repo root are the CPU baselines — re-run and
 commit to track the perf trajectory across PRs instead of losing it with
 CI artifacts. ``--no-json`` disables writing.
+
+The feature-quality and serve-read-path suites keep their own record
+schemas (they predate/outgrow the CSV contract); a clean full pass
+delegates to their modules' writers so ``python -m benchmarks.run``
+regenerates ``BENCH_features.json`` and ``BENCH_serve.json`` too, and
+``--only features`` / ``--only serve`` regenerates just that file.
 """
 from __future__ import annotations
 
@@ -23,7 +29,15 @@ import json
 import os
 import sys
 
-from benchmarks import bank_bench, kernels_bench, krls_shard_bench, paper, roofline_report
+from benchmarks import (
+    bank_bench,
+    features_bench,
+    kernels_bench,
+    krls_shard_bench,
+    paper,
+    roofline_report,
+    serve_bench,
+)
 
 # bench name -> which BENCH_<family>.json it persists to.
 SUITE_OF = {
@@ -42,6 +56,17 @@ SUITE_OF = {
     "bank_fused_vs_twopass": "bank",
     "bank_streams": "bank",
     "bank_chunked_streams": "bank",
+}
+
+# Suites whose committed baseline has its own (richer) record schema and
+# writer: run.py delegates to the module's main() so ONE entry point
+# regenerates every committed BENCH_*.json. Each writes a *whole* file, so
+# unlike the CSV suites a --only=<name> run may safely (re)write it.
+# (BENCH_chunk.json stays manual: chunk_bench must set XLA_FLAGS device
+# counts before the first jax import, which run.py has already done.)
+DELEGATED = {
+    "features": features_bench.main,
+    "serve": serve_bench.main,
 }
 
 
@@ -86,6 +111,16 @@ def main() -> None:
     }
     missing = set(benches) - set(SUITE_OF)
     assert not missing, f"benches missing a SUITE_OF entry: {sorted(missing)}"
+
+    if args.only in DELEGATED:
+        if args.no_json:
+            print(f"# --only={args.only} is a delegated suite; nothing to do")
+            return
+        out = os.path.join(args.json_dir, f"BENCH_{args.only}.json")
+        DELEGATED[args.only](["--out", out])
+        print(f"# wrote {out}")
+        return
+
     print("name,us_per_call,derived")
     failures = 0
     by_suite: dict[str, list] = {}
@@ -130,6 +165,13 @@ def main() -> None:
             path = os.path.join(args.json_dir, f"BENCH_{family}.json")
             with open(path, "w") as f:
                 json.dump(payload, f, indent=2)
+            print(f"# wrote {path}", flush=True)
+        # Full clean pass: also regenerate the delegated-suite baselines so
+        # `python -m benchmarks.run` refreshes EVERY committed BENCH_*.json
+        # (except BENCH_chunk.json — see the DELEGATED comment).
+        for family, entry in sorted(DELEGATED.items()):
+            path = os.path.join(args.json_dir, f"BENCH_{family}.json")
+            entry(["--out", path])
             print(f"# wrote {path}", flush=True)
 
     if failures:

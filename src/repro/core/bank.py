@@ -56,6 +56,7 @@ __all__ = [
     "bank_step",
     "bank_run",
     "bank_predict",
+    "bank_predict_block",
     "BankHParams",
     "bank_hparams",
     "hp_bank_init",
@@ -110,6 +111,44 @@ def bank_run(learner: OnlineLearner, states, xs: jax.Array, ys: jax.Array):
 def bank_predict(learner: OnlineLearner, states, xs: jax.Array) -> jax.Array:
     """Batched inference: one ``x (d,)`` per filter, ``xs (B, d)``."""
     return jax.vmap(learner.predict_fn)(states, xs)
+
+
+def bank_predict_block(
+    state,
+    xq: jax.Array,
+    rff: FeatureLike,
+    mode: str = "auto",
+    precision: Optional[str] = None,
+) -> jax.Array:
+    """Fused read path: a ``(B, Q, d)`` query block per tenant -> ``(B, Q)``.
+
+    Works for every theta-carrying bank state (``LMSState`` and
+    ``RLSState`` predict identically: ``z(x) . theta``) and every feature
+    family — trig families dispatch to ``ops.rff_bank_predict`` (one
+    launch, theta and W fetched once for the whole block), non-trig
+    families fall back to a batched ``featurize`` with the same f32
+    reduction. ``precision="bf16"`` drops the featurize GEMM / feature
+    block to bf16 with f32 accumulation (contract in kernels/ref.py);
+    state is read-only and stays f32. Per query this matches the
+    :func:`bank_predict` adapter (tested; bitwise at f32 for trig
+    families).
+    """
+    theta = state.theta
+    precision = ref.canon_precision(precision)
+    tf = as_trig_or_none(rff)
+    if tf is None:
+        z = featurize(rff, xq)  # (B, Q, D)
+        if precision == "bf16":
+            z = z.astype(jnp.bfloat16)
+        pred = jnp.sum(
+            theta[:, None, :].astype(jnp.float32) * z.astype(jnp.float32),
+            axis=-1,
+        )
+        return pred.astype(theta.dtype)
+    return ops.rff_bank_predict(
+        theta, xq, tf.omega, tf.bias, tf.scale, mode=mode,
+        precision=precision,
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -6,6 +6,9 @@ a bank of B filters — the serving hot path; z never leaves VMEM.
 ``rff_krls_bank_step``: fully-fused EW-RLS step (featurize+predict+rank-1
 P downdate) for a bank of B KRLS tenants — one VMEM-resident (D, D) tile
 per tenant per tick.
+``rff_bank_predict``: fused predict-only read path — a (B, Q, d) query
+block per tenant against read-only theta in one launch, with a
+``precision="bf16"`` mixed-precision featurize knob (serving hot path).
 ``rff_attention``: chunked causal linear attention with fixed-size VMEM state
 (the paper's insight applied to the attention kernel).
 ``flash_attention``: blocked online-softmax attention (the full-attention
@@ -15,10 +18,12 @@ Each kernel has a pure-jnp oracle in ``ref.py`` and a backend-dispatching
 wrapper in ``ops.py``; correctness is swept in tests with ``interpret=True``.
 """
 from repro.kernels import ops, ref
+from repro.kernels.chunking import default_chunk_t
 from repro.kernels.ops import (
     flash_attention,
     rff_attention,
     rff_attention_decode,
+    rff_bank_predict,
     rff_features,
     rff_klms_bank_chunk,
     rff_klms_bank_step,
@@ -29,7 +34,9 @@ from repro.kernels.ops import (
 __all__ = [
     "ops",
     "ref",
+    "default_chunk_t",
     "rff_features",
+    "rff_bank_predict",
     "rff_klms_bank_step",
     "rff_klms_bank_chunk",
     "rff_krls_bank_step",

@@ -10,7 +10,65 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["num_chunks", "time_blocks", "valid_time_mask", "unblock_time"]
+__all__ = [
+    "num_chunks",
+    "time_blocks",
+    "valid_time_mask",
+    "unblock_time",
+    "default_chunk_t",
+]
+
+# Conservative per-launch working-set budget for the chunked kernels: half
+# of a ~16 MiB/core VMEM, leaving the other half for double-buffering and
+# the per-tick stream tiles the pipeline keeps in flight.
+DEFAULT_VMEM_BUDGET = 8 * 2**20
+
+# Bank-axis block the chunk kernels tile with (rff_klms_step.py block_b
+# default; the KRLS chunk kernel owns one (D, D) P tile at a time).
+_BLOCK_B = 8
+_LANES = 128
+
+
+def default_chunk_t(
+    bank: int,
+    dfeat: int,
+    dtype=jnp.float32,
+    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+    pmat: bool = False,
+    input_dim: int | None = None,
+) -> int:
+    """VMEM-budget-aware default tick count T for one chunked launch.
+
+    The chunk kernels keep the state resident per bank block (theta
+    ``(block_b, D)``; plus one ``(D, D)`` P tile for KRLS) alongside the
+    grid-invariant ``W`` tile, and stream one ``(block_b, lanes)`` input
+    tile plus a handful of per-tick scalars per tick. T is the largest
+    power of two whose streamed ticks fit in the budget left over after
+    the resident tiles — i.e. "as many ticks per launch as VMEM lets the
+    pipeline keep in flight", clamped to [8, 512]. When the resident state
+    alone busts the budget (huge-D KRLS) the floor of 8 still amortizes
+    dispatch without asking VMEM for more than the per-tick kernel already
+    does.
+
+    ``bank`` only matters below the bank-block width (a 2-tenant bank
+    streams 2-row tiles); ``dtype`` is the *stream* dtype — state scratch
+    is always f32 in the kernels. ``input_dim`` is the true input d; the
+    W tile and per-tick x tile are charged at its lane-padded width
+    (default: one 128-lane tile — the low-d serving shapes).
+    """
+    item = jnp.dtype(dtype).itemsize
+    bb = max(1, min(_BLOCK_B, bank))
+    dpad = -(-dfeat // _LANES) * _LANES
+    din = _LANES if input_dim is None else -(-input_dim // _LANES) * _LANES
+    state_bytes = bb * dpad * 4 + (dpad * dpad * 4 if pmat else 0)
+    w_bytes = din * dpad * 4  # the grid-invariant (d, D) tile, lane-padded
+    # Per tick: one (bb, din) x tile + y/mu/mask in, pred/err out.
+    stream_bytes = bb * (din + 4) * item
+    spare = vmem_budget - state_bytes - w_bytes
+    if spare < 8 * stream_bytes:
+        return 8
+    t = 1 << ((spare // stream_bytes).bit_length() - 1)  # floor pow2
+    return int(min(512, t))
 
 
 def num_chunks(n: int, chunk: int) -> int:

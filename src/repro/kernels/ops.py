@@ -13,8 +13,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.chunking import time_blocks, unblock_time
+from repro.kernels.chunking import default_chunk_t, time_blocks, unblock_time
 from repro.kernels.rff_features import rff_features_pallas
+from repro.kernels.rff_predict import rff_bank_predict_pallas
 from repro.kernels.rff_attention import rff_attention_pallas
 from repro.kernels.rff_klms_step import (
     rff_klms_bank_chunk_pallas,
@@ -29,6 +30,7 @@ from repro.kernels.flash_attention import flash_attention_pallas
 __all__ = [
     "default_backend",
     "rff_features",
+    "rff_bank_predict",
     "rff_klms_bank_step",
     "rff_klms_bank_chunk",
     "rff_krls_bank_step",
@@ -62,7 +64,10 @@ def _use_pallas(mode: str) -> tuple[bool, bool]:
     raise ValueError(f"unknown kernel mode {mode!r}")
 
 
-@functools.partial(jax.jit, static_argnames=("mode", "block_m", "block_n", "block_k"))
+@functools.partial(
+    jax.jit,
+    static_argnames=("mode", "block_m", "block_n", "block_k", "precision"),
+)
 def rff_features(
     x: jax.Array,
     w: jax.Array,
@@ -73,22 +78,61 @@ def rff_features(
     block_m: int = 128,
     block_n: int = 128,
     block_k: int = 128,
+    precision: str | None = None,
 ) -> jax.Array:
     """Affine-trig feature map ``s * cos(x @ w + b)`` over arbitrary leading
     dims. ``s`` optional ``(D,)`` per-feature scales (the canonical form of
     every trig family in repro.features); None = Monte-Carlo ``sqrt(2/D)``.
+    ``precision=None/"f32"`` is the bitwise-legacy path; ``"bf16"`` runs the
+    GEMM in bf16 with f32 accumulation and emits bf16 features (the
+    read-path contract documented in kernels/ref.py).
     """
     use_pallas, interpret = _use_pallas(mode)
     if not use_pallas:
-        return ref.rff_features_ref(x, w, b, s)
+        return ref.rff_features_ref(x, w, b, s, precision)
     lead = x.shape[:-1]
     x2 = x.reshape(-1, x.shape[-1])
     out = rff_features_pallas(
         x2, w, b, s,
         block_m=block_m, block_n=block_n, block_k=block_k,
-        interpret=interpret,
+        interpret=interpret, precision=precision,
     )
     return out.reshape(*lead, w.shape[-1])
+
+
+@functools.partial(
+    jax.jit, static_argnames=("mode", "block_b", "block_q", "precision")
+)
+def rff_bank_predict(
+    theta: jax.Array,
+    xq: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    s: jax.Array | None = None,
+    *,
+    mode: str = "auto",
+    block_b: int = 8,
+    block_q: int = 64,
+    precision: str | None = None,
+) -> jax.Array:
+    """Fused predict-only read path: a ``(B, Q, d)`` query block per tenant
+    against read-only ``theta (B, D)`` in one launch -> ``(B, Q)``.
+
+    This is `core.bank.bank_predict` (one vmapped featurize+matvec per
+    query) batched into one kernel: theta and W are fetched once per launch
+    instead of once per query, and ``precision="bf16"`` drops the featurize
+    GEMM to bf16 with f32 accumulation (contract in kernels/ref.py; state
+    is read-only and stays f32). The serving read path of serve/snapshot.py
+    and benchmarks/serve_bench.py.
+    """
+    use_pallas, interpret = _use_pallas(mode)
+    if not use_pallas:
+        return ref.rff_bank_predict_ref(theta, xq, w, b, s, precision)
+    return rff_bank_predict_pallas(
+        theta, xq, w, b, s,
+        block_b=block_b, block_q=block_q, precision=precision,
+        interpret=interpret,
+    )
 
 
 @functools.partial(jax.jit, static_argnames=("mode", "block_b"))
@@ -139,9 +183,11 @@ def rff_klms_bank_chunk(
     theta (B, D), xs (B, T, d), ys (B, T), shared w (d, D) / b (D,), mu
     scalar or (B,), mask optional (B, T) validity gate (1 = apply update),
     s optional (D,) per-feature scales (None = sqrt(2/D)).
-    ``chunk`` bounds the ticks per kernel launch: ``None`` runs all T in one
-    launch; ``chunk=k`` scans ceil(T/k) launches with a zero-masked final
-    remainder. Returns (theta_new, predictions (B, T), errors (B, T)).
+    ``chunk`` bounds the ticks per kernel launch: ``chunk=k`` scans
+    ceil(T/k) launches with a zero-masked final remainder; ``None`` picks
+    the VMEM-budget-aware ``kernels.chunking.default_chunk_t`` for (B, D)
+    (>= 512 for serving-sized banks, so short chunks still run in one
+    launch). Returns (theta_new, predictions (B, T), errors (B, T)).
     """
     use_pallas, interpret = _use_pallas(mode)
     mu_arr = jnp.asarray(mu, theta.dtype)
@@ -159,7 +205,11 @@ def rff_klms_bank_chunk(
             block_b=block_b, interpret=interpret,
         )
 
-    if chunk is None or tlen <= chunk:
+    if chunk is None:
+        chunk = default_chunk_t(
+            bsz, theta.shape[-1], theta.dtype, input_dim=xs.shape[-1]
+        )
+    if tlen <= chunk:
         return launch(theta, xs, ys, mask)
 
     xs_c = time_blocks(xs, chunk, axis=1)
@@ -226,7 +276,9 @@ def rff_krls_bank_chunk(
     theta (B, D), pmat (B, D, D), xs (B, T, d), ys (B, T), shared w (d, D) /
     b (D,), beta scalar or (B,), mask optional (B, T) validity gate, s
     optional (D,) per-feature scales (None = sqrt(2/D)).
-    ``chunk`` bounds ticks per launch as in :func:`rff_klms_bank_chunk`.
+    ``chunk`` bounds ticks per launch as in :func:`rff_klms_bank_chunk`
+    (``None`` = VMEM-budget-aware default, with the ``(D, D)`` P tile
+    charged against the budget).
     Returns (theta_new, pmat_new, predictions (B, T), errors (B, T)).
     """
     use_pallas, interpret = _use_pallas(mode)
@@ -244,7 +296,12 @@ def rff_krls_bank_chunk(
             th, pm, xc, yc, w, b, beta_arr, mc, s, interpret=interpret
         )
 
-    if chunk is None or tlen <= chunk:
+    if chunk is None:
+        chunk = default_chunk_t(
+            bsz, theta.shape[-1], theta.dtype, pmat=True,
+            input_dim=xs.shape[-1],
+        )
+    if tlen <= chunk:
         return launch(theta, pmat, xs, ys, mask)
 
     xs_c = time_blocks(xs, chunk, axis=1)

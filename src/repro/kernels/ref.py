@@ -7,11 +7,15 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 __all__ = [
+    "canon_precision",
+    "mp_project",
+    "mp_trig",
     "rff_features_ref",
     "klms_tick_math",
     "krls_tick_math",
     "rff_klms_bank_step_ref",
     "rff_klms_bank_chunk_ref",
+    "rff_bank_predict_ref",
     "rff_krls_bank_step_ref",
     "rff_krls_bank_chunk_ref",
     "rff_attention_ref",
@@ -19,17 +23,76 @@ __all__ = [
     "flash_attention_ref",
 ]
 
+# The read-path precision contract (ONE definition, shared by the oracles
+# here and the Pallas kernels, so they can never drift):
+#
+#   precision=None / "f32"  — the GEMM runs in f32 (bitwise-unchanged
+#     legacy behavior for f32 inputs).
+#   precision="bf16"        — the featurize GEMM inputs are cast to bf16
+#     and accumulated in f32 (one MXU pass at half the input bandwidth);
+#     the bias-add / cos / scale run in f32 on the f32 accumulator; the
+#     feature block is then *stored* in bf16 (halving activation bytes).
+#     Every downstream reduction against theta accumulates in f32.
+#
+# Training state is never touched by this knob: KRLS ``P`` and both
+# families' theta stay f32 — only the read path and feature maps drop
+# precision (the ISSUE-5 contract; tolerance per family is pinned in
+# tests/test_read_path.py).
+_BF16 = ("bf16", "bfloat16")
+_F32 = (None, "f32", "float32")
 
-def rff_features_ref(x, w, b, s=None):
+
+def canon_precision(precision):
+    """Validate + canonicalize the knob: ``"bf16"`` or ``None`` (f32).
+
+    Every read-path entry point (ops dispatchers, Pallas wrappers, the
+    generic bank fallback) funnels through this, so a typo'd precision
+    string raises identically on every backend instead of silently running
+    f32 on one of them.
+    """
+    if precision in _BF16:
+        return "bf16"
+    if precision in _F32:
+        return None
+    raise ValueError(f"unknown precision {precision!r}; use None/'f32'/'bf16'")
+
+
+def mp_project(x, w, precision=None):
+    """``x @ w`` under the read-path precision contract (f32 accumulate)."""
+    if canon_precision(precision) == "bf16":
+        return jnp.dot(
+            x.astype(jnp.bfloat16),
+            w.astype(jnp.bfloat16),
+            preferred_element_type=jnp.float32,
+        )
+    return x @ w
+
+
+def mp_trig(proj, b, s, precision=None):
+    """bias-add + cos + per-feature scale; bf16 storage when asked."""
+    z = s * jnp.cos(proj + b)
+    if precision in _BF16:
+        return z.astype(jnp.bfloat16)
+    return z
+
+
+def rff_features_ref(x, w, b, s=None, precision=None):
     """``s * cos(x @ w + b)`` — oracle for kernels/rff_features.py.
 
     ``s`` is the per-feature scale row of the canonical affine-trig form
     (repro.features); None means the Monte-Carlo ``sqrt(2/D)``.
+    ``precision`` follows the module-level read-path contract (bf16 GEMM +
+    f32 accumulation + bf16 feature storage); the default is bitwise the
+    legacy f32 path.
     """
     if s is None:
         d = w.shape[1]
-        return jnp.sqrt(2.0 / d).astype(x.dtype) * jnp.cos(x @ w + b)
-    return s.astype(x.dtype) * jnp.cos(x @ w + b)
+        s = jnp.sqrt(2.0 / d).astype(x.dtype)
+    else:
+        s = s.astype(x.dtype)
+    if precision in _F32:
+        return s * jnp.cos(x @ w + b)
+    return mp_trig(mp_project(x, w, precision), b, s, precision)
 
 
 def klms_tick_math(theta, z, y, mu_b, gate=None):
@@ -106,6 +169,28 @@ def rff_klms_bank_chunk_ref(theta, xs, ys, w, b, mu, mask=None, s=None):
     mask_t = jnp.swapaxes(mask.astype(theta.dtype), 0, 1)
     theta, (preds, errs) = jax.lax.scan(tick, theta, (xs_t, ys_t, mask_t))
     return theta, jnp.swapaxes(preds, 0, 1), jnp.swapaxes(errs, 0, 1)
+
+
+def rff_bank_predict_ref(theta, xq, w, b, s=None, precision=None):
+    """Predict-only bank oracle — for kernels/rff_predict.py.
+
+    The read path of the paper's fixed-cost claim: a query block of Q
+    inputs per tenant is one featurize GEMM plus one f32 reduction against
+    the tenant's theta — no state is touched. theta (B, D), xq (B, Q, d),
+    shared w (d, D) / b (D,), s optional (D,) per-feature scales,
+    ``precision`` per the module-level read-path contract. Returns
+    predictions (B, Q).
+
+    Numerically this is ``vmap over tenants of vmap over queries of
+    ``featurize(x) . theta`` — the `core.bank.bank_predict` adapter — with
+    the per-query matvecs batched into one GEMM.
+    """
+    z = rff_features_ref(xq, w, b, s, precision)  # (B, Q, D)
+    pred = jnp.sum(
+        theta[:, None, :].astype(jnp.float32) * z.astype(jnp.float32),
+        axis=-1,
+    )
+    return pred.astype(theta.dtype)
 
 
 def rff_krls_bank_step_ref(theta, pmat, x, y, w, b, beta, s=None):

@@ -30,16 +30,20 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.ref import canon_precision
+
 __all__ = ["rff_features_kernel", "rff_features_pallas"]
 
 
-def rff_features_kernel(x_ref, w_ref, b_ref, s_ref, o_ref, acc_ref):
+def rff_features_kernel(x_ref, w_ref, b_ref, s_ref, o_ref, acc_ref, *,
+                        precision=None):
     """Grid point (i, j, k): accumulate x[i,k] @ w[k,j]; finalize on last k.
 
     The per-feature scale row ``s`` is applied with the bias-add/cos on the
     last K step (VPU work, one extra (1, bn) tile in VMEM). Padded-D columns
     carry s == 0, so their outputs are exactly 0 before the wrapper slices
-    them off.
+    them off. ``precision="bf16"`` (contract in kernels/ref.py) feeds the
+    MXU bf16 operands; the accumulator stays f32 either way.
     """
     k = pl.program_id(2)
     nk = pl.num_programs(2)
@@ -48,9 +52,10 @@ def rff_features_kernel(x_ref, w_ref, b_ref, s_ref, o_ref, acc_ref):
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
+    gemm_dtype = jnp.bfloat16 if precision == "bf16" else jnp.float32
     acc_ref[...] += jnp.dot(
-        x_ref[...].astype(jnp.float32),
-        w_ref[...].astype(jnp.float32),
+        x_ref[...].astype(gemm_dtype),
+        w_ref[...].astype(gemm_dtype),
         preferred_element_type=jnp.float32,
     )
 
@@ -64,7 +69,9 @@ def rff_features_kernel(x_ref, w_ref, b_ref, s_ref, o_ref, acc_ref):
 
 @functools.partial(
     jax.jit,
-    static_argnames=("block_m", "block_n", "block_k", "interpret", "out_dtype"),
+    static_argnames=(
+        "block_m", "block_n", "block_k", "interpret", "out_dtype", "precision",
+    ),
 )
 def rff_features_pallas(
     x: jax.Array,
@@ -77,6 +84,7 @@ def rff_features_pallas(
     block_k: int = 128,
     interpret: bool = False,
     out_dtype: jnp.dtype | None = None,
+    precision: str | None = None,
 ) -> jax.Array:
     """``s * cos(x @ w + b)`` via pallas_call.
 
@@ -86,6 +94,9 @@ def rff_features_pallas(
       b: ``(D,)`` phases.
       s: ``(D,)`` per-feature scales; None means the Monte-Carlo
          ``sqrt(2/D)`` (legacy RFF behavior, bitwise unchanged).
+      precision: None/"f32" (legacy, bitwise unchanged) or "bf16" — the
+        GEMM operands drop to bf16 with f32 accumulation and the feature
+        block is emitted in bf16 (kernels/ref.py documents the contract).
 
     Shapes are padded up to block multiples internally (zero-padding the
     contraction dim is exact: it adds 0 to the pre-activation; zero-padding
@@ -94,6 +105,9 @@ def rff_features_pallas(
     m, d = x.shape
     d2, n = w.shape
     assert d == d2 and b.shape == (n,)
+    precision = canon_precision(precision)
+    if precision == "bf16":
+        out_dtype = out_dtype or jnp.bfloat16
     out_dtype = out_dtype or x.dtype
     if s is None:
         # f32 regardless of w's dtype: the kernel multiplies in f32, and the
@@ -113,7 +127,7 @@ def rff_features_pallas(
 
     grid = (mp // bm, np_ // bn, kp // bk)
     out = pl.pallas_call(
-        rff_features_kernel,
+        functools.partial(rff_features_kernel, precision=precision),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),

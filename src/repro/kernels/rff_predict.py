@@ -1,0 +1,146 @@
+"""Pallas TPU kernel: fused predict-only bank read path.
+
+The paper's central efficiency claim is about *prediction*: once the state
+is a fixed-size theta, serving a query is one O(D d) featurize plus one
+O(D) dot — no growing dictionary, no state mutation. PRs 1-4 fused and
+chunked the *update* path; this kernel gives the read path the same
+treatment. For a bank of B tenants and a block of Q queries per tenant it
+computes, in ONE launch,
+
+    z      = s * cos(x_q @ W + b)        (featurize, shared map)
+    y_hat  = theta_tenant . z            (predict; state read-only)
+
+against a read-only theta — the serving hot loop at read:write ratios where
+queries dominate (serve/snapshot.py holds that theta frozen between
+publishes, so this kernel never races the trainer).
+
+TPU mapping:
+  * grid (bank_blocks, query_blocks) with the query axis minor: the
+    ``(block_b, D)`` theta tile is pinned per bank block (index_map ignores
+    the query index), so Pallas keeps it VMEM-resident across the WHOLE
+    query block — theta HBM traffic is one read per launch instead of one
+    per query (the bytes-moved crossover benchmarks/serve_bench.py models);
+  * ``W (d, D)`` is grid-invariant exactly as in the update kernels — one
+    HBM fetch per launch, reused by every (bank, query) block;
+  * the featurize GEMM flattens the ``(block_b, block_q, d)`` query tile to
+    ``(block_b * block_q, d)`` so the MXU sees one well-shaped matmul; the
+    predict reduction is VPU work on the same tile.
+
+Mixed precision (the ``precision=`` knob, contract in ``kernels/ref.py``):
+``bf16`` casts the GEMM inputs to bf16 with f32 accumulation and stores the
+feature block in bf16; the final reduction against theta accumulates in
+f32. State stays f32 — predictions move, theta never does (per-family
+tolerance pinned in tests/test_read_path.py).
+
+Padding (all exact): the contraction dim d zero-pads (adds 0 to the
+projection); padded D columns carry s == 0 so z is exactly 0 there and the
+reduction is untouched; padded bank rows / query columns are sliced off.
+
+VMEM per grid step: W d*D f32 + theta block_b*D f32 + the (block_b*block_q,
+d + D) projection/feature tiles. Defaults (8, 64) keep the feature tile at
+512*D f32 — 1 MiB at D=512, comfortably under budget with double-buffering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.ref import canon_precision, mp_project, mp_trig
+from repro.kernels.rff_features import _ceil_to, _pad2
+
+__all__ = ["rff_predict_kernel", "rff_bank_predict_pallas"]
+
+
+def rff_predict_kernel(
+    x_ref, w_ref, b_ref, s_ref, theta_ref, o_ref, *, precision=None
+):
+    """Grid point (i, j): query block j for bank block i on resident theta.
+
+    The query index is minor, so ``theta_ref``'s tile (pinned to block
+    (i, 0)) survives in VMEM across every query block of tenant block i.
+    """
+    bb, bq, dp = x_ref.shape
+    xf = x_ref[...].reshape(bb * bq, dp)
+    proj = mp_project(
+        xf.astype(jnp.float32), w_ref[...].astype(jnp.float32), precision
+    )
+    z = mp_trig(
+        proj,
+        b_ref[...].astype(jnp.float32),
+        s_ref[...].astype(jnp.float32),
+        precision,
+    )
+    theta = theta_ref[...].astype(jnp.float32)  # (bb, D)
+    zr = z.reshape(bb, bq, -1).astype(jnp.float32)
+    o_ref[...] = jnp.sum(theta[:, None, :] * zr, axis=-1).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_b", "block_q", "precision", "interpret")
+)
+def rff_bank_predict_pallas(
+    theta: jax.Array,
+    xq: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    s: jax.Array | None = None,
+    *,
+    block_b: int = 8,
+    block_q: int = 64,
+    precision: str | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """Fused predict-only read path for B tenants sharing one feature map.
+
+    Args:
+      theta: ``(B, D)`` per-tenant solutions (read-only).
+      xq: ``(B, Q, d)`` a block of Q queries per tenant.
+      w: ``(d, D)`` shared spectral matrix.
+      b: ``(D,)`` shared phases.
+      s: ``(D,)`` shared per-feature scales; None = Monte-Carlo
+         ``sqrt(2/D)``.
+      precision: None/"f32" (bitwise the oracle) or "bf16" (mixed-precision
+        featurize, f32 accumulation — contract in kernels/ref.py).
+
+    Returns:
+      predictions ``(B, Q)``.
+    """
+    precision = canon_precision(precision)
+    bsz, qlen, d = xq.shape
+    dfeat = theta.shape[-1]
+    assert theta.shape == (bsz, dfeat)
+    assert w.shape == (d, dfeat) and b.shape == (dfeat,)
+    if s is None:
+        s = jnp.full((dfeat,), float((2.0 / dfeat) ** 0.5), jnp.float32)
+    assert s.shape == (dfeat,)
+
+    bb = min(block_b, _ceil_to(bsz, 8))
+    bq = min(block_q, _ceil_to(qlen, 8))
+    bp, qp = _ceil_to(bsz, bb), _ceil_to(qlen, bq)
+    dp, np_ = _ceil_to(d, 128), _ceil_to(dfeat, 128)
+
+    theta_p = _pad2(theta, bp, np_)
+    xq_p = jnp.pad(xq, ((0, bp - bsz), (0, qp - qlen), (0, dp - d)))
+    w_p = _pad2(w, dp, np_)
+    b_p = jnp.pad(b, (0, np_ - dfeat))[None, :]  # (1, Np)
+    s_p = jnp.pad(s, (0, np_ - dfeat))[None, :]  # (1, Np), padded scales 0
+
+    grid = (bp // bb, qp // bq)  # q minor: theta resident across queries
+    pred = pl.pallas_call(
+        functools.partial(rff_predict_kernel, precision=precision),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bb, bq, dp), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((dp, np_), lambda i, j: (0, 0)),  # grid-invariant W
+            pl.BlockSpec((1, np_), lambda i, j: (0, 0)),
+            pl.BlockSpec((1, np_), lambda i, j: (0, 0)),
+            pl.BlockSpec((bb, np_), lambda i, j: (i, 0)),  # resident theta
+        ],
+        out_specs=pl.BlockSpec((bb, bq), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bp, qp), theta.dtype),
+        interpret=interpret,
+    )(xq_p, w_p, b_p, s_p, theta_p)
+    return pred[:bsz, :qlen]

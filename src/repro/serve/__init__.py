@@ -14,6 +14,12 @@ from repro.serve.queue import (
     make_chunked_bank_server,
     make_chunked_krls_bank_server,
 )
+from repro.serve.snapshot import (
+    SnapshotServer,
+    StateSnapshot,
+    klms_snapshot_server,
+    krls_snapshot_server,
+)
 
 __all__ = [
     "generate",
@@ -29,4 +35,8 @@ __all__ = [
     "make_chunked_krls_bank_server",
     "klms_micro_batch_queue",
     "krls_micro_batch_queue",
+    "SnapshotServer",
+    "StateSnapshot",
+    "klms_snapshot_server",
+    "krls_snapshot_server",
 ]

@@ -84,8 +84,14 @@ class MicroBatchQueue:
         from :func:`make_chunked_bank_server` or the KRLS variant.
       state: initial bank state (owned and advanced by the queue).
       input_dim: ``d`` of the feature space.
-      chunk: T — the fixed time-block every flush launches (constant shape,
-        so the server compiles exactly once).
+      chunk: T — the time-block cap every flush launches (constant shape
+        by default, so the server compiles exactly once).
+      adaptive: pick each flush's T from backlog depth (next power of two,
+        capped at ``chunk``) instead of the global constant — the
+        per-tenant chunk-size-adaptation ROADMAP item. At most
+        log2(chunk)+1 shapes ever trace; ragged-stream equivalence is
+        unchanged (tested). ``arrivals`` tracks cumulative per-tenant
+        arrival counts as the adaptation/monitoring signal.
 
     ``submit`` enqueues one observation; ``flush`` processes up to T queued
     observations per tenant in arrival order and returns
@@ -94,22 +100,25 @@ class MicroBatchQueue:
     """
 
     def __init__(self, chunk_step: Callable, state, input_dim: int,
-                 chunk: int = 16):
+                 chunk: int = 16, adaptive: bool = False):
         self._chunk_step = chunk_step
         self.state = state
         self.input_dim = input_dim
         self.chunk = chunk
+        self.adaptive = adaptive
         lead = jax.tree.leaves(state)[0]
         self.num_tenants = int(lead.shape[0])
         # Buffers take the bank's working precision (f64 banks under x64
         # must not round-trip observations through f32).
         self._dtype = np.dtype(lead.dtype)
         self._pending = [deque() for _ in range(self.num_tenants)]
+        self.arrivals = [0] * self.num_tenants
         self.ticks_served = 0
         self.flushes = 0
 
     def submit(self, tenant: int, x, y) -> None:
         """Enqueue one ``(x, y)`` observation for ``tenant``."""
+        self.arrivals[tenant] += 1
         self._pending[tenant].append(
             (np.asarray(x, self._dtype), self._dtype.type(y)),
         )
@@ -118,9 +127,20 @@ class MicroBatchQueue:
         """Pending observation count per tenant."""
         return [len(q) for q in self._pending]
 
+    def _flush_chunk(self) -> int:
+        """T for the next flush. Fixed mode always launches ``chunk`` (one
+        trace ever); adaptive mode sizes T to the deepest backlog, rounded
+        up to a power of two so only log2(chunk) shapes ever trace — a
+        mostly-idle bank pays for a (B, 1) launch instead of a (B, chunk)
+        one, and bursty tenants still get the full chunk."""
+        if not self.adaptive:
+            return self.chunk
+        depth = max(1, max(self.backlog(), default=1))
+        return min(self.chunk, 1 << (depth - 1).bit_length())
+
     def flush(self) -> dict[int, list[tuple[float, float]]]:
         """One chunked launch over up to T queued ticks per tenant."""
-        bsz, tlen, d = self.num_tenants, self.chunk, self.input_dim
+        bsz, tlen, d = self.num_tenants, self._flush_chunk(), self.input_dim
         if not any(self._pending):
             return {}
         xs = np.zeros((bsz, tlen, d), self._dtype)
@@ -162,6 +182,7 @@ def klms_micro_batch_queue(
     chunk: int = 16,
     mode: str = "auto",
     state=None,
+    adaptive: bool = False,
 ) -> MicroBatchQueue:
     """Ready-to-serve KLMS queue: fresh bank state + jitted chunk server."""
     if state is None:
@@ -171,6 +192,7 @@ def klms_micro_batch_queue(
         state,
         input_dim(rff),
         chunk=chunk,
+        adaptive=adaptive,
     )
 
 
@@ -182,6 +204,7 @@ def krls_micro_batch_queue(
     chunk: int = 16,
     mode: str = "auto",
     state=None,
+    adaptive: bool = False,
 ) -> MicroBatchQueue:
     """Ready-to-serve KRLS queue: fresh bank state + jitted chunk server."""
     if state is None:
@@ -191,4 +214,5 @@ def krls_micro_batch_queue(
         state,
         input_dim(rff),
         chunk=chunk,
+        adaptive=adaptive,
     )

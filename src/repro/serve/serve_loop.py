@@ -19,9 +19,7 @@ from repro.models import decode_state_init, decode_step
 __all__ = ["generate", "prefill_tokens"]
 
 
-def prefill_tokens(
-    params: dict, cfg: ModelConfig, state, tokens: jax.Array
-):
+def prefill_tokens(params: dict, cfg: ModelConfig, state, tokens: jax.Array):
     """Feed a prompt token-by-token through the decode path (state warmup).
 
     tokens: (B, P). Returns (state, last_logits). Token-by-token prefill is
@@ -59,9 +57,7 @@ def generate(
     def sample(logits, key):
         if temperature <= 0.0:
             return jnp.argmax(logits, -1).astype(jnp.int32)
-        return jax.random.categorical(key, logits / temperature, -1).astype(
-            jnp.int32
-        )
+        return jax.random.categorical(key, logits / temperature, -1).astype(jnp.int32)
 
     def body(carry, key):
         st, lg = carry

@@ -1,0 +1,293 @@
+"""Snapshot-decoupled serving: train on the live state, read a frozen replica.
+
+The micro-batch queue (serve/queue.py) made the *write* path cheap, but its
+bank state is the only copy — a predict issued mid-flush would race the
+trainer. This module splits the two: the queue keeps mutating its live
+state, and a :class:`SnapshotServer` publishes an immutable read replica
+every ``publish_every`` update-ticks. Reads (the fused query-block kernel,
+``ops.rff_bank_predict``) only ever see a published replica, so
+
+* **no torn reads** — a replica is one pytree reference captured at a flush
+  boundary; JAX arrays are immutable and CPython reference assignment is
+  atomic, so a concurrent reader sees the whole old replica or the whole
+  new one, never a mix of flushes (property-tested);
+* **bounded staleness** — publication happens at the first flush boundary
+  where at least ``publish_every`` ticks have accumulated, so between
+  flushes a reader lags the live state by fewer than ``publish_every``
+  ticks (plus whatever the current flush is consuming);
+* **deferred write-flush is safe** — because reads never touch the live
+  state, flushes can wait for the age/size watermarks (the ROADMAP
+  background-flush item) without blocking or corrupting the read path.
+
+Everything stays host-side and synchronous like the queue itself (submit /
+flush / predict compose with any outer event loop; watermarks are checked
+on ``submit`` and via ``maybe_flush`` rather than from a thread).
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from functools import partial
+from typing import Any, Callable, NamedTuple, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bank import bank_predict_block
+from repro.features.base import FeatureLike
+from repro.serve.queue import (
+    MicroBatchQueue,
+    klms_micro_batch_queue,
+    krls_micro_batch_queue,
+)
+
+__all__ = [
+    "StateSnapshot",
+    "SnapshotServer",
+    "klms_snapshot_server",
+    "krls_snapshot_server",
+]
+
+
+class StateSnapshot(NamedTuple):
+    """A published read replica of the bank state.
+
+    Attributes:
+      state: the bank-state pytree at a flush boundary (immutable arrays).
+      version: publish counter (0 = the initial, untrained state).
+      tick: cumulative update-ticks folded into this replica — readers can
+        bound their own staleness as ``queue.ticks_served - tick``.
+    """
+
+    state: Any
+    version: int
+    tick: int
+
+
+class _Row(NamedTuple):
+    """One-tenant view of a bank state (theta row) for the predict path."""
+
+    theta: jax.Array
+
+
+@partial(jax.jit, static_argnames=("mode", "precision"))
+def _predict_block_jit(state, xq, fm, mode, precision):
+    return bank_predict_block(state, xq, fm, mode=mode, precision=precision)
+
+
+class SnapshotServer:
+    """Double-buffered serving front end over a :class:`MicroBatchQueue`.
+
+    Args:
+      queue: the micro-batch queue owning the live (train) state.
+      rff: the bank's shared feature map (any repro.features family).
+      publish_every: publish a fresh read replica at the first flush
+        boundary where this many update-ticks have accumulated since the
+        last publish. 1 = publish after every flush (freshest reads);
+        larger values amortize replica turnover at bounded staleness.
+      mode / precision: read-path knobs forwarded to the fused predict
+        kernel (``precision="bf16"`` = mixed-precision featurize, contract
+        in kernels/ref.py). Training precision is untouched.
+      age_watermark: seconds — flush when the oldest queued observation has
+        waited this long (checked on ``submit`` / ``maybe_flush``).
+      size_watermark: observations — flush when any tenant's backlog
+        reaches this depth.
+      clock: injectable monotonic clock (tests pass a fake).
+    """
+
+    def __init__(
+        self,
+        queue: MicroBatchQueue,
+        rff: FeatureLike,
+        publish_every: int = 1,
+        *,
+        mode: str = "auto",
+        precision: Optional[str] = None,
+        age_watermark: Optional[float] = None,
+        size_watermark: Optional[int] = None,
+        clock: Callable[[], float] = time.monotonic,
+    ):
+        if publish_every < 1:
+            raise ValueError("publish_every must be >= 1")
+        self.queue = queue
+        self.rff = rff
+        self.publish_every = publish_every
+        self.mode = mode
+        self.precision = precision
+        self.age_watermark = age_watermark
+        self.size_watermark = size_watermark
+        self._clock = clock
+        self._arrival_times = [deque() for _ in range(queue.num_tenants)]
+        self._snapshot = StateSnapshot(state=queue.state, version=0, tick=0)
+
+    # -- read path ---------------------------------------------------------
+
+    @property
+    def snapshot(self) -> StateSnapshot:
+        """The current read replica (grab once per request for consistency)."""
+        return self._snapshot
+
+    @property
+    def staleness(self) -> int:
+        """Update-ticks the read replica lags the live (train) state."""
+        return self.queue.ticks_served - self._snapshot.tick
+
+    def predict(self, tenant: int, xs) -> jax.Array:
+        """Serve queries for one tenant from the frozen replica.
+
+        ``xs`` is ``(d,)`` for one query (returns a scalar) or ``(Q, d)``
+        for a query block (returns ``(Q,)``) — either way the fused
+        predict-only path, never the live training state.
+        """
+        snap = self._snapshot  # one grab = one consistent replica
+        xq = jnp.asarray(xs)
+        single = xq.ndim == 1
+        if single:
+            xq = xq[None]
+        row = _Row(theta=snap.state.theta[tenant][None])
+        pred = _predict_block_jit(
+            row, xq[None], self.rff, mode=self.mode, precision=self.precision
+        )[0]
+        return pred[0] if single else pred
+
+    def predict_block(self, xq) -> jax.Array:
+        """Serve a ``(B, Q, d)`` query block for the whole bank in one
+        launch from the frozen replica -> ``(B, Q)``."""
+        snap = self._snapshot
+        return _predict_block_jit(
+            snap.state,
+            jnp.asarray(xq),
+            self.rff,
+            mode=self.mode,
+            precision=self.precision,
+        )
+
+    # -- write path --------------------------------------------------------
+
+    def submit(self, tenant: int, x, y) -> None:
+        """Enqueue one observation; flush if a watermark trips."""
+        # Tag the arrival with its backlog position, not just a count:
+        # observations submitted straight to the queue (legal; they opt out
+        # of the age watermark) occupy positions too, and a flush must
+        # consume exactly the timestamps of the positions it served.
+        pos = len(self.queue._pending[tenant])
+        self._arrival_times[tenant].append((pos, self._clock()))
+        self.queue.submit(tenant, x, y)
+        self.maybe_flush()
+
+    def _consume_arrival_times(self, tenant: int, served: int) -> None:
+        times = self._arrival_times[tenant]
+        while times and times[0][0] < served:
+            times.popleft()
+        self._arrival_times[tenant] = deque(
+            (pos - served, t) for pos, t in times
+        )
+
+    def maybe_flush(self) -> dict:
+        """Background-flush hook: flush when the age or size watermark
+        trips. Call from an outer event loop for purely time-driven
+        flushes; ``submit`` calls it after every arrival."""
+        backlog = self.queue.backlog()
+        if not any(backlog):
+            return {}
+        if self.size_watermark is not None and max(backlog) >= self.size_watermark:
+            return self.flush()
+        if self.age_watermark is not None:
+            oldest = min(
+                (t[0][1] for t in self._arrival_times if t), default=None
+            )
+            if oldest is not None and (
+                self._clock() - oldest >= self.age_watermark
+            ):
+                return self.flush()
+        return {}
+
+    def flush(self) -> dict:
+        """One chunked train launch on the live state; publish when due.
+
+        Due-ness is derived from :attr:`staleness` (replica tick vs
+        ``queue.ticks_served``), not a local counter — so ticks applied by
+        calling ``queue.flush()`` directly still count toward the bound.
+        """
+        res = self.queue.flush()
+        for tenant, served in res.items():
+            self._consume_arrival_times(tenant, len(served))
+        if self.staleness >= self.publish_every:
+            self.publish()
+        return res
+
+    def drain(self) -> dict:
+        """Flush until every backlog is empty; merge per-tenant results."""
+        merged: dict = {}
+        while any(self.queue.backlog()):
+            for tenant, served in self.flush().items():
+                merged.setdefault(tenant, []).extend(served)
+        return merged
+
+    def reset(self, state) -> None:
+        """Restart both buffers on a fresh bank state (tenant-eviction /
+        benchmark hook): the live queue state AND the published replica
+        drop to version 0. Pending observations must be drained first."""
+        if any(self.queue.backlog()):
+            raise RuntimeError("reset with pending observations; drain first")
+        self.queue.state = state
+        self.queue.ticks_served = 0
+        self._arrival_times = [deque() for _ in range(self.queue.num_tenants)]
+        self._snapshot = StateSnapshot(state=state, version=0, tick=0)
+
+    def publish(self) -> StateSnapshot:
+        """Swap the read replica to the live state (atomic: one reference
+        assignment of an immutable pytree)."""
+        self._snapshot = StateSnapshot(
+            state=self.queue.state,
+            version=self._snapshot.version + 1,
+            tick=self.queue.ticks_served,
+        )
+        return self._snapshot
+
+
+def klms_snapshot_server(
+    rff: FeatureLike,
+    num_tenants: int,
+    mu: Union[float, jax.Array] = 0.5,
+    chunk: int = 16,
+    publish_every: int = 1,
+    mode: str = "auto",
+    precision: Optional[str] = None,
+    adaptive: bool = False,
+    **kw,
+) -> SnapshotServer:
+    """Ready-to-serve snapshot-decoupled KLMS bank server."""
+    queue = klms_micro_batch_queue(
+        rff, num_tenants, mu=mu, chunk=chunk, mode=mode, adaptive=adaptive
+    )
+    return SnapshotServer(
+        queue, rff, publish_every, mode=mode, precision=precision, **kw
+    )
+
+
+def krls_snapshot_server(
+    rff: FeatureLike,
+    num_tenants: int,
+    lam: Union[float, jax.Array] = 1e-4,
+    beta: Union[float, jax.Array] = 0.9995,
+    chunk: int = 16,
+    publish_every: int = 1,
+    mode: str = "auto",
+    precision: Optional[str] = None,
+    adaptive: bool = False,
+    **kw,
+) -> SnapshotServer:
+    """Ready-to-serve snapshot-decoupled KRLS bank server."""
+    queue = krls_micro_batch_queue(
+        rff,
+        num_tenants,
+        lam=lam,
+        beta=beta,
+        chunk=chunk,
+        mode=mode,
+        adaptive=adaptive,
+    )
+    return SnapshotServer(
+        queue, rff, publish_every, mode=mode, precision=precision, **kw
+    )

@@ -1,0 +1,264 @@
+"""Snapshot-decoupled serving invariants: every prediction reflects a whole
+publish boundary (no torn reads), staleness is bounded by publish_every,
+and the watermark-driven background flush actually flushes.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.rff import sample_rff
+from repro.features.base import featurize
+from repro.serve import klms_snapshot_server, krls_snapshot_server
+
+RFF = sample_rff(jax.random.PRNGKey(0), 4, 48, sigma=3.0)
+_RNG = np.random.RandomState(7)
+XS = _RNG.randn(400, 4).astype(np.float32)
+YS = _RNG.randn(400).astype(np.float32)
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _expected_pred(theta_row, x):
+    z = featurize(RFF, jnp.asarray(x))
+    return jnp.sum(theta_row.astype(jnp.float32) * z.astype(jnp.float32))
+
+
+def _drive(server, schedule, publish_every):
+    """Run a submit/flush/predict schedule; verify every prediction against
+    an offline replay of the publish history.
+
+    ``schedule`` items: ("submit", tenant, i) enqueues sample i,
+    ("flush",) flushes, ("predict", tenant, i) queries with sample i.
+    The replay records theta at every publish boundary; a torn read — a
+    prediction built from thetas of two different flushes — would match
+    no recorded boundary.
+    """
+    boundary_thetas = [np.asarray(server.queue.state.theta)]
+    for step in schedule:
+        if step[0] == "submit":
+            _, tenant, i = step
+            server.submit(tenant, XS[i], YS[i])
+        elif step[0] == "flush":
+            ver_before = server.snapshot.version
+            server.flush()
+            if server.snapshot.version != ver_before:
+                boundary_thetas.append(np.asarray(server.snapshot.state.theta))
+        else:
+            _, tenant, i = step
+            got = float(server.predict(tenant, XS[i]))
+            snap = server.snapshot
+            # The served replica IS the latest recorded publish boundary.
+            assert snap.version == len(boundary_thetas) - 1
+            want = float(_expected_pred(
+                jnp.asarray(boundary_thetas[snap.version][tenant]), XS[i]
+            ))
+            np.testing.assert_allclose(got, want, atol=1e-6, rtol=1e-6)
+            # Staleness never reaches publish_every outside a flush.
+            assert 0 <= server.staleness < publish_every
+    return boundary_thetas
+
+
+def test_interleaved_reads_consistent_with_publish_boundaries():
+    """Deterministic interleaving: reads between flushes keep returning the
+    frozen replica even as the live state trains past it."""
+    publish_every = 6
+    srv = klms_snapshot_server(
+        RFF, 3, mu=0.5, chunk=4, publish_every=publish_every, mode="xla"
+    )
+    schedule = []
+    i = 0
+    for round_ in range(12):
+        for _ in range(1 + round_ % 3):
+            schedule.append(("submit", round_ % 3, i))
+            i += 1
+        schedule.append(("predict", round_ % 3, i % 50))
+        schedule.append(("flush",))
+        schedule.append(("predict", (round_ + 1) % 3, i % 50))
+    boundaries = _drive(srv, schedule, publish_every)
+    assert len(boundaries) >= 3  # publishes actually happened
+    srv.drain()
+    assert srv.staleness < publish_every
+
+
+def test_reads_are_stale_until_publish():
+    """publish_every > backlog: flushes advance the live state while the
+    replica (and therefore reads) stay at version 0 until enough ticks
+    accumulate — the read path provably does NOT track the live state."""
+    srv = klms_snapshot_server(
+        RFF, 1, mu=0.5, chunk=4, publish_every=100, mode="xla"
+    )
+    p0 = float(srv.predict(0, XS[0]))
+    for i in range(8):
+        srv.submit(0, XS[i], YS[i])
+    srv.flush()
+    srv.flush()
+    assert srv.queue.ticks_served == 8
+    assert srv.snapshot.version == 0 and srv.staleness == 8
+    assert float(srv.predict(0, XS[0])) == p0  # frozen replica, frozen read
+    srv.publish()  # manual publish releases the new state to readers
+    assert srv.staleness == 0
+    assert float(srv.predict(0, XS[0])) != p0
+
+
+def test_size_watermark_background_flush():
+    srv = klms_snapshot_server(
+        RFF, 2, mu=0.5, chunk=8, publish_every=1, mode="xla", size_watermark=3
+    )
+    srv.submit(0, XS[0], YS[0])
+    srv.submit(1, XS[1], YS[1])
+    srv.submit(0, XS[2], YS[2])
+    assert srv.queue.flushes == 0
+    srv.submit(0, XS[3], YS[3])  # tenant 0 hits depth 3 -> flush
+    assert srv.queue.flushes == 1
+    assert srv.queue.backlog() == [0, 0]
+    assert srv.snapshot.version == 1  # publish_every=1 published it
+
+
+def test_age_watermark_background_flush():
+    clock = FakeClock()
+    srv = klms_snapshot_server(
+        RFF,
+        2,
+        mu=0.5,
+        chunk=8,
+        publish_every=1,
+        mode="xla",
+        age_watermark=5.0,
+        clock=clock,
+    )
+    srv.submit(0, XS[0], YS[0])
+    clock.t = 4.0
+    srv.submit(1, XS[1], YS[1])
+    assert srv.queue.flushes == 0  # oldest is 4s — under the watermark
+    clock.t = 5.5
+    srv.maybe_flush()  # the event-loop poll hook
+    assert srv.queue.flushes == 1 and srv.queue.backlog() == [0, 0]
+    # Age resets with the queue drained: no spurious follow-up flush.
+    srv.maybe_flush()
+    assert srv.queue.flushes == 1
+
+
+def test_direct_queue_flush_still_counts_toward_publish():
+    """Publish due-ness derives from replica staleness, so ticks applied by
+    calling queue.flush() directly (the queue's own API) still trigger a
+    publish at the server's next flush."""
+    srv = klms_snapshot_server(
+        RFF, 1, mu=0.5, chunk=4, publish_every=3, mode="xla"
+    )
+    for i in range(4):
+        srv.queue.submit(0, XS[i], YS[i])
+    srv.queue.flush()  # bypasses the server: 4 ticks, no publish
+    assert srv.snapshot.version == 0 and srv.staleness == 4
+    srv.submit(0, XS[4], YS[4])
+    srv.flush()  # staleness 5 >= publish_every 3 -> publish catches up
+    assert srv.snapshot.version == 1 and srv.staleness == 0
+
+
+def test_age_watermark_survives_interleaved_direct_submits():
+    """A timed observation keeps its deadline even when untimed direct
+    queue submissions sit ahead of it in the backlog."""
+    clock = FakeClock()
+    srv = klms_snapshot_server(
+        RFF,
+        1,
+        mu=0.5,
+        chunk=1,  # one observation per flush: the direct one goes first
+        publish_every=1,
+        mode="xla",
+        age_watermark=5.0,
+        clock=clock,
+    )
+    srv.queue.submit(0, XS[0], YS[0])  # untimed, position 0
+    srv.submit(0, XS[1], YS[1])  # timed at t=0, position 1
+    srv.flush()  # serves only the untimed head (chunk=1)
+    assert srv.queue.backlog() == [1]
+    clock.t = 6.0
+    srv.maybe_flush()  # the timed observation's deadline must still fire
+    assert srv.queue.backlog() == [0]
+
+
+def test_krls_snapshot_server_predicts_from_replica():
+    srv = krls_snapshot_server(
+        RFF, 2, lam=1e-2, chunk=8, publish_every=4, mode="xla"
+    )
+    for i in range(6):
+        srv.submit(0, XS[i], YS[i])
+    srv.drain()
+    assert srv.snapshot.version >= 1
+    got = float(srv.predict(0, XS[10]))
+    want = float(_expected_pred(srv.snapshot.state.theta[0], XS[10]))
+    np.testing.assert_allclose(got, want, atol=1e-6, rtol=1e-6)
+    # Block reads serve the whole bank from the same replica.
+    blk = srv.predict_block(np.broadcast_to(XS[10][None, None], (2, 1, 4)))
+    np.testing.assert_allclose(float(blk[0, 0]), got, atol=1e-6)
+
+
+def test_predict_block_precision_knob():
+    srv = klms_snapshot_server(
+        RFF, 2, mu=0.5, chunk=8, publish_every=1, mode="xla", precision="bf16"
+    )
+    for i in range(8):
+        srv.submit(0, XS[i], YS[i])
+        srv.submit(1, XS[i], YS[i])
+    srv.drain()
+    f32 = _expected_pred(srv.snapshot.state.theta[0], XS[20])
+    got = float(srv.predict(0, XS[20]))
+    assert abs(got - float(f32)) < 2e-2  # the documented bf16 read bound
+    # Training state is untouched by the read precision knob.
+    assert srv.queue.state.theta.dtype == jnp.float32
+
+
+def test_reset_requires_drained_queue():
+    srv = klms_snapshot_server(RFF, 1, chunk=4, mode="xla")
+    srv.submit(0, XS[0], YS[0])
+    with pytest.raises(RuntimeError):
+        srv.reset(srv.queue.state)
+    srv.drain()
+    srv.reset(srv.queue.state)
+    assert srv.snapshot.version == 0 and srv.staleness == 0
+
+
+# ---------------------------------------------------------------------------
+# Property test: ANY interleaving of submit/flush/predict serves every read
+# from some whole publish boundary with bounded staleness.
+# ---------------------------------------------------------------------------
+
+try:  # optional dep: only the hypothesis test skips without it — the
+    # deterministic interleaving tests above must always run.
+    from hypothesis import given, settings, strategies as st
+
+    _HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    _HAVE_HYPOTHESIS = False
+
+if _HAVE_HYPOTHESIS:
+    _ops = st.lists(
+        st.one_of(
+            st.tuples(
+                st.just("submit"), st.integers(0, 2), st.integers(0, 99)
+            ),
+            st.tuples(st.just("flush")),
+            st.tuples(
+                st.just("predict"), st.integers(0, 2), st.integers(0, 99)
+            ),
+        ),
+        min_size=5,
+        max_size=40,
+    )
+
+    @given(schedule=_ops, publish_every=st.integers(1, 9))
+    @settings(max_examples=15, deadline=None)
+    def test_any_interleaving_no_torn_reads(schedule, publish_every):
+        srv = klms_snapshot_server(
+            RFF, 3, mu=0.5, chunk=4, publish_every=publish_every, mode="xla"
+        )
+        _drive(srv, schedule, publish_every)
+        srv.drain()
+        assert srv.staleness < publish_every
