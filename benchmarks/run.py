@@ -19,8 +19,9 @@ CI artifacts. ``--no-json`` disables writing.
 The feature-quality and serve-read-path suites keep their own record
 schemas (they predate/outgrow the CSV contract); a clean full pass
 delegates to their modules' writers so ``python -m benchmarks.run``
-regenerates ``BENCH_features.json`` and ``BENCH_serve.json`` too, and
-``--only features`` / ``--only serve`` regenerates just that file.
+regenerates ``BENCH_features.json``, ``BENCH_serve.json`` and
+``BENCH_replay.json`` too, and ``--only features`` / ``--only serve`` /
+``--only replay`` regenerates just that file.
 """
 from __future__ import annotations
 
@@ -35,6 +36,7 @@ from benchmarks import (
     kernels_bench,
     krls_shard_bench,
     paper,
+    replay_bench,
     roofline_report,
     serve_bench,
 )
@@ -66,6 +68,7 @@ SUITE_OF = {
 # counts before the first jax import, which run.py has already done.)
 DELEGATED = {
     "features": features_bench.main,
+    "replay": replay_bench.main,
     "serve": serve_bench.main,
 }
 

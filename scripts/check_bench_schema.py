@@ -1,0 +1,87 @@
+#!/usr/bin/env python
+"""Guard the committed BENCH_*.json baselines' shared schema.
+
+Every committed baseline (and every CI smoke artifact) must stay loadable
+by the same trajectory tooling, so this enforces the stable cross-suite
+contract without freezing any suite's richer per-record fields:
+
+* top-level keys ``suite`` (str), ``backend`` (str) and ``records``
+  (non-empty list) are present;
+* every record is an object carrying a ``bench`` name.
+
+Suites may add columns freely — removing one of the shared keys (or
+committing an empty/truncated run) is what this catches, as a cheap CI
+step instead of a post-merge surprise when the perf-trajectory tooling
+next reads the files.
+
+Usage::
+
+    python scripts/check_bench_schema.py [FILES...]
+
+With no arguments, checks every ``BENCH_*.json`` at the repo root.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+SHARED_KEYS = {"suite": str, "backend": str, "records": list}
+
+
+def check_file(path: str) -> list[str]:
+    """Return the schema violations for one BENCH_*.json (empty = OK)."""
+    errors = []
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable ({e})"]
+    if not isinstance(payload, dict):
+        return [f"{path}: top level is {type(payload).__name__}, not object"]
+    for key, typ in SHARED_KEYS.items():
+        if key not in payload:
+            errors.append(f"{path}: missing top-level key {key!r}")
+        elif not isinstance(payload[key], typ):
+            errors.append(
+                f"{path}: {key!r} is {type(payload[key]).__name__}, "
+                f"expected {typ.__name__}"
+            )
+    records = payload.get("records")
+    if isinstance(records, list):
+        if not records:
+            errors.append(f"{path}: 'records' is empty")
+        for i, rec in enumerate(records):
+            if not isinstance(rec, dict):
+                errors.append(f"{path}: records[{i}] is not an object")
+            elif "bench" not in rec:
+                errors.append(f"{path}: records[{i}] missing 'bench'")
+    return errors
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if argv:
+        paths = argv
+    else:
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        paths = sorted(glob.glob(os.path.join(root, "BENCH_*.json")))
+    if not paths:
+        print("check_bench_schema: no BENCH_*.json files found", file=sys.stderr)
+        return 1
+    failures = 0
+    for path in paths:
+        errors = check_file(path)
+        if errors:
+            failures += 1
+            for e in errors:
+                print(e, file=sys.stderr)
+        else:
+            n = len(json.load(open(path))["records"])
+            print(f"{path}: OK ({n} records)")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -73,6 +73,10 @@ __all__ = [
     "stack_feature_maps",
     "mixed_klms_bank_run",
     "mixed_krls_bank_run",
+    "tenant_row",
+    "set_tenant_row",
+    "evict_tenant",
+    "rebuild_tenant",
 ]
 
 
@@ -665,3 +669,109 @@ def mixed_krls_bank_run(
     ys_t = jnp.swapaxes(ys, 0, 1)
     state, outs = jax.lax.scan(body, state, (xs_t, ys_t))
     return state, jax.tree.map(lambda a: jnp.swapaxes(a, 0, 1), outs)
+
+
+# ---------------------------------------------------------------------------
+# Bank-slot tenant lifecycle — eviction and scan-based rebuild.
+#
+# Because every tenant's state is a fixed-size SLICE of the bank pytree,
+# releasing a slot is one O(1) row write (no compaction, no reallocation,
+# the bank program never retraces), and re-admitting a tenant is a replay
+# of its observation log through core/scan.py's parallel-in-time engine
+# back into the same slot. ``mode="sequential"`` routes through the exact
+# jitted run-loops the training path uses — bitwise the never-evicted
+# state by construction; ``"scan"`` / ``"blocked"`` trade that for O(log T)
+# rebuild depth within the pinned tolerances of tests/test_replay.py.
+# ---------------------------------------------------------------------------
+
+
+def tenant_row(state, tenant: int):
+    """One tenant's view of a bank state (scalar-leaf learner state)."""
+    return jax.tree.map(lambda a: a[tenant], state)
+
+
+def set_tenant_row(state, tenant: int, row):
+    """Write a single-learner state into bank slot ``tenant`` (O(1))."""
+    return jax.tree.map(
+        lambda a, r: a.at[tenant].set(jnp.asarray(r, a.dtype)), state, row
+    )
+
+
+def _fresh_row(state, lam: Union[float, jax.Array] = 1e-4, tenant: int = 0):
+    """A fresh single-learner row shaped like one slot of ``state``."""
+    row = tenant_row(state, tenant)
+    if hasattr(state, "pmat"):
+        dfeat = state.pmat.shape[-1]
+        fresh = rff_krls_init(dfeat, _hp_row(lam, tenant), state.pmat.dtype)
+        return RLSState(
+            theta=fresh.theta.astype(state.theta.dtype),
+            pmat=fresh.pmat,
+            step=fresh.step,
+        )
+    return jax.tree.map(jnp.zeros_like, row)
+
+
+def _hp_row(v, tenant: int):
+    """Scalar hyperparam, or one tenant's entry of a per-tenant ``(B,)``.
+
+    Python scalars pass through *unwrapped*: promoting a float to a 0-d
+    array changes weak-typing/constant folding, which costs the sequential
+    replay its bitwise match with the training path (1-ulp drift)."""
+    if isinstance(v, (int, float)):
+        return v
+    arr = jnp.asarray(v)
+    return arr[tenant] if arr.ndim else arr
+
+
+def evict_tenant(state, tenant: int, init_row=None, lam: Union[float, jax.Array] = 1e-4):
+    """Release bank slot ``tenant``: one O(1) row write, nothing else moves.
+
+    ``init_row`` is the row to park in the slot (a fresh single-learner
+    state by default — zero theta for LMS banks, ``P_0 = I/lam`` for RLS
+    banks, with per-tenant ``lam`` honored when it is a ``(B,)`` sweep).
+    The slot keeps serving the parked row until :func:`rebuild_tenant`
+    re-admits the tenant, so the bank program never changes shape.
+    """
+    if init_row is None:
+        init_row = _fresh_row(state, lam, tenant)
+    return set_tenant_row(state, tenant, init_row)
+
+
+def rebuild_tenant(
+    state,
+    tenant: int,
+    rff: FeatureLike,
+    xs: jax.Array,
+    ys: jax.Array,
+    *,
+    mu: Union[float, jax.Array] = 0.5,
+    lam: Union[float, jax.Array] = 1e-4,
+    beta: Union[float, jax.Array] = 0.9995,
+    mode: str = "scan",
+    chunk: Optional[int] = None,
+    normalized: bool = False,
+) -> "jax.Array":
+    """Reconstruct slot ``tenant`` from its replay log ``xs (T, d)``,
+    ``ys (T,)`` and write it back into the bank.
+
+    The family is inferred from the bank state (``pmat`` leaf = RLS);
+    hyperparameters may be scalars or per-tenant ``(B,)`` sweeps (the
+    tenant's entry is used). ``mode``/``chunk`` select the replay schedule
+    (core/scan.py): ``"sequential"`` is bitwise the training path,
+    ``"scan"``/``"blocked"`` rebuild in O(log T) depth within pinned
+    tolerance. Returns the updated bank state.
+    """
+    from repro.core.scan import replay_klms, replay_krls
+
+    if hasattr(state, "pmat"):
+        row = replay_krls(
+            rff, xs, ys,
+            lam=_hp_row(lam, tenant), beta=_hp_row(beta, tenant),
+            mode=mode, chunk=chunk,
+        )
+    else:
+        row = replay_klms(
+            rff, xs, ys, _hp_row(mu, tenant),
+            mode=mode, chunk=chunk, normalized=normalized,
+        )
+    return set_tenant_row(state, tenant, row)

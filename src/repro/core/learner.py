@@ -8,6 +8,9 @@ module wraps each behind one protocol:
     step(state, x, y) -> (state, StepOut) (one online sample)
     run(state, xs, ys) -> (state, StepOut arrays)   (lax.scan stream drive)
     predict(state, x) -> y_hat            (inference, no update)
+    rebuild(xs, ys, state, mode) -> state (parallel-in-time replay; falls
+                                           back to a sequential run for
+                                           learners without scan elements)
 
 so drivers, benchmarks, the vmapped filter bank (core/bank.py) and the
 serving loop never branch on the algorithm. Adapters are thin closures over
@@ -49,6 +52,14 @@ from repro.core.krls import (
 )
 from repro.core.krls_ald import ald_krls_init, ald_krls_predict, ald_krls_step
 from repro.core.qklms import qklms_init, qklms_predict, qklms_step
+from repro.core.scan import (
+    ScanElement,
+    klms_scan_element,
+    krls_scan_element,
+    nklms_scan_element,
+    replay_klms,
+    replay_krls,
+)
 from repro.features.base import FeatureLike, feature_dtype, featurize
 
 __all__ = [
@@ -70,11 +81,20 @@ class OnlineLearner:
       init_fn: ``(key | None) -> state`` — fresh filter state.
       step_fn: ``(state, x, y) -> (state, StepOut)`` — one online update.
       predict_fn: ``(state, x) -> y_hat`` — inference without updating.
+      scan_element: the recurrence as an associative algebra
+        (:class:`repro.core.scan.ScanElement`), or None for learners whose
+        state update is not an associative element (growing-dictionary
+        baselines, sharded programs).
+      replay_fn: ``(xs, ys, state=None, mode=..., chunk=...) -> state`` —
+        the parallel-in-time state rebuild (core/scan.py), or None to fall
+        back to a sequential ``run`` in :meth:`rebuild`.
     """
 
     init_fn: Callable
     step_fn: Callable
     predict_fn: Callable
+    scan_element: Optional[ScanElement] = None
+    replay_fn: Optional[Callable] = None
 
     def init(self, key: Optional[jax.Array] = None):
         return self.init_fn(key)
@@ -99,6 +119,27 @@ class OnlineLearner:
 
         return jax.lax.scan(body, state, (xs, ys))
 
+    def rebuild(
+        self,
+        xs: jax.Array,
+        ys: jax.Array,
+        state=None,
+        mode: str = "scan",
+        chunk: Optional[int] = None,
+    ):
+        """Reconstruct the final state from a replay log (no per-tick outs).
+
+        ``mode="sequential"`` (or a learner without a ``replay_fn``) drives
+        the ordinary scan — bitwise the training path. ``"scan"`` /
+        ``"blocked"`` rebuild through the associative-element engine in
+        O(log T) / O(Tc + log nc) depth within the tolerances pinned in
+        tests/test_replay.py.
+        """
+        if self.replay_fn is None or mode == "sequential":
+            final, _ = self.run(state, xs, ys)
+            return final
+        return self.replay_fn(xs, ys, state=state, mode=mode, chunk=chunk)
+
 
 def klms_learner(rff: FeatureLike, mu: float) -> OnlineLearner:
     """RFFKLMS (paper §4): fixed-size theta, per-step O(D d).
@@ -111,6 +152,10 @@ def klms_learner(rff: FeatureLike, mu: float) -> OnlineLearner:
         ),
         step_fn=lambda s, x, y: rff_klms_step(s, (x, y), rff, mu),
         predict_fn=lambda s, x: featurize(rff, x) @ s.theta,
+        scan_element=klms_scan_element(mu),
+        replay_fn=lambda xs, ys, state=None, mode="scan", chunk=None: (
+            replay_klms(rff, xs, ys, mu, state=state, mode=mode, chunk=chunk)
+        ),
     )
 
 
@@ -124,6 +169,13 @@ def nklms_learner(
         ),
         step_fn=lambda s, x, y: rff_nklms_step(s, (x, y), rff, mu, eps),
         predict_fn=lambda s, x: featurize(rff, x) @ s.theta,
+        scan_element=nklms_scan_element(mu, eps),
+        replay_fn=lambda xs, ys, state=None, mode="scan", chunk=None: (
+            replay_klms(
+                rff, xs, ys, mu, state=state, mode=mode, chunk=chunk,
+                normalized=True, eps=eps,
+            )
+        ),
     )
 
 
@@ -137,6 +189,13 @@ def krls_learner(
         ),
         step_fn=lambda s, x, y: rff_krls_step(s, (x, y), rff, beta),
         predict_fn=lambda s, x: featurize(rff, x) @ s.theta,
+        scan_element=krls_scan_element(beta),
+        replay_fn=lambda xs, ys, state=None, mode="scan", chunk=None: (
+            replay_krls(
+                rff, xs, ys, lam=lam, beta=beta, state=state, mode=mode,
+                chunk=chunk,
+            )
+        ),
     )
 
 

@@ -36,6 +36,7 @@ def default_chunk_t(
     vmem_budget: int = DEFAULT_VMEM_BUDGET,
     pmat: bool = False,
     input_dim: int | None = None,
+    elements: bool = False,
 ) -> int:
     """VMEM-budget-aware default tick count T for one chunked launch.
 
@@ -55,12 +56,23 @@ def default_chunk_t(
     is always f32 in the kernels. ``input_dim`` is the true input d; the
     W tile and per-tick x tile are charged at its lane-padded width
     (default: one 128-lane tile — the low-d serving shapes).
+
+    ``elements=True`` sizes for the replay chunk-element kernels
+    (kernels/rff_scan.py): their resident accumulator is a full ``(D, D)``
+    element tile and the per-chunk ``(D, D)`` output block must
+    double-buffer against the next chunk's writeback — both charged here
+    so large-D replays don't bust the budget the way a theta-only charge
+    would suggest they could afford.
     """
     item = jnp.dtype(dtype).itemsize
     bb = max(1, min(_BLOCK_B, bank))
     dpad = -(-dfeat // _LANES) * _LANES
     din = _LANES if input_dim is None else -(-input_dim // _LANES) * _LANES
     state_bytes = bb * dpad * 4 + (dpad * dpad * 4 if pmat else 0)
+    if elements:
+        # Resident (D, D) element accumulator + double-buffered (D, D)
+        # element output tile.
+        state_bytes += 2 * dpad * dpad * 4
     w_bytes = din * dpad * 4  # the grid-invariant (d, D) tile, lane-padded
     # Per tick: one (bb, din) x tile + y/mu/mask in, pred/err out.
     stream_bytes = bb * (din + 4) * item

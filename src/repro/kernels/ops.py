@@ -13,7 +13,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
-from repro.kernels.chunking import default_chunk_t, time_blocks, unblock_time
+from repro.kernels.chunking import (
+    default_chunk_t,
+    time_blocks,
+    unblock_time,
+    valid_time_mask,
+)
 from repro.kernels.rff_features import rff_features_pallas
 from repro.kernels.rff_predict import rff_bank_predict_pallas
 from repro.kernels.rff_attention import rff_attention_pallas
@@ -25,6 +30,10 @@ from repro.kernels.rff_krls_step import (
     rff_krls_bank_chunk_pallas,
     rff_krls_bank_step_pallas,
 )
+from repro.kernels.rff_scan import (
+    rff_klms_chunk_elements_pallas,
+    rff_krls_chunk_elements_pallas,
+)
 from repro.kernels.flash_attention import flash_attention_pallas
 
 __all__ = [
@@ -35,6 +44,8 @@ __all__ = [
     "rff_klms_bank_chunk",
     "rff_krls_bank_step",
     "rff_krls_bank_chunk",
+    "rff_klms_chunk_elements",
+    "rff_krls_chunk_elements",
     "rff_attention",
     "rff_attention_decode",
     "flash_attention",
@@ -321,6 +332,91 @@ def rff_krls_bank_chunk(
         pmat,
         unblock_time(preds, tlen, axis=1),
         unblock_time(errs, tlen, axis=1),
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("mode", "chunk", "normalized", "eps")
+)
+def rff_klms_chunk_elements(
+    xs: jax.Array,
+    ys: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    mu: jax.Array | float,
+    s: jax.Array | None = None,
+    *,
+    mode: str = "auto",
+    chunk: int | None = None,
+    normalized: bool = False,
+    eps: float = 1e-6,
+) -> tuple[jax.Array, jax.Array]:
+    """Per-chunk composed KLMS affine elements for the replay scan.
+
+    xs (T, d), ys (T,) — ONE replayed stream (a tenant's log), not a bank
+    sweep; shared w (d, D) / b (D,), mu scalar, s optional (D,) per-feature
+    scales (None = sqrt(2/D)). The stream is time-blocked into
+    ceil(T/chunk) chunks (zero-masked remainder composing the identity) and
+    each chunk folds into one ``theta -> a theta + v`` element — the
+    blocked half of core/scan.py's ``mode="blocked"`` replay. ``chunk=None``
+    picks the element-aware VMEM default (``default_chunk_t(...,
+    elements=True)``). Returns ``(a (nc, D, D), v (nc, D))`` f32.
+    """
+    use_pallas, interpret = _use_pallas(mode)
+    tlen = xs.shape[0]
+    dfeat = w.shape[-1]
+    if chunk is None:
+        chunk = default_chunk_t(
+            1, dfeat, xs.dtype, input_dim=xs.shape[-1], elements=True
+        )
+    chunk = min(chunk, tlen)
+    xs_c = time_blocks(xs, chunk)  # (nc, Tc, d)
+    ys_c = time_blocks(ys, chunk)
+    mask_c = valid_time_mask(tlen, chunk, jnp.float32)
+    if not use_pallas:
+        return ref.klms_chunk_elements_ref(
+            xs_c, ys_c, w, b, mu, mask_c, s, normalized=normalized, eps=eps
+        )
+    return rff_klms_chunk_elements_pallas(
+        xs_c, ys_c, w, b, mu, mask_c, s,
+        normalized=normalized, eps=eps, interpret=interpret,
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "chunk"))
+def rff_krls_chunk_elements(
+    xs: jax.Array,
+    ys: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    beta: jax.Array | float,
+    s: jax.Array | None = None,
+    *,
+    mode: str = "auto",
+    chunk: int | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Per-chunk composed KRLS decay elements for the replay scan.
+
+    Layout as :func:`rff_klms_chunk_elements`; ``beta`` the scalar
+    forgetting factor. Each chunk folds into one information-form element
+    ``(g, phi, r)`` with masked remainder ticks composing ``(1, 0, 0)``.
+    Returns ``(g (nc,), phi (nc, D, D), r (nc, D))`` f32.
+    """
+    use_pallas, interpret = _use_pallas(mode)
+    tlen = xs.shape[0]
+    dfeat = w.shape[-1]
+    if chunk is None:
+        chunk = default_chunk_t(
+            1, dfeat, xs.dtype, input_dim=xs.shape[-1], elements=True
+        )
+    chunk = min(chunk, tlen)
+    xs_c = time_blocks(xs, chunk)  # (nc, Tc, d)
+    ys_c = time_blocks(ys, chunk)
+    mask_c = valid_time_mask(tlen, chunk, jnp.float32)
+    if not use_pallas:
+        return ref.krls_chunk_elements_ref(xs_c, ys_c, w, b, beta, mask_c, s)
+    return rff_krls_chunk_elements_pallas(
+        xs_c, ys_c, w, b, beta, mask_c, s, interpret=interpret
     )
 
 

@@ -18,6 +18,8 @@ __all__ = [
     "rff_bank_predict_ref",
     "rff_krls_bank_step_ref",
     "rff_krls_bank_chunk_ref",
+    "klms_chunk_elements_ref",
+    "krls_chunk_elements_ref",
     "rff_attention_ref",
     "rff_attention_state_ref",
     "flash_attention_ref",
@@ -237,6 +239,95 @@ def rff_krls_bank_chunk_ref(theta, pmat, xs, ys, w, b, beta, mask=None, s=None):
         tick, (theta, pmat), (xs_t, ys_t, mask_t)
     )
     return theta, pmat, jnp.swapaxes(preds, 0, 1), jnp.swapaxes(errs, 0, 1)
+
+
+def klms_chunk_elements_ref(
+    xs, ys, w, b, mu, mask=None, s=None, normalized=False, eps=1e-6
+):
+    """Per-chunk composed KLMS affine elements — oracle for
+    kernels/rff_scan.py's ``rff_klms_chunk_elements_pallas``.
+
+    xs (nc, Tc, d), ys (nc, Tc), mask optional (nc, Tc), mu scalar. Each
+    chunk's Tc ticks fold into ONE ``theta -> a theta + v`` map via the
+    same rank-1 recursion the kernel runs on its resident tile:
+
+        row = z A;  A <- A - mu_eff z row^T;  v <- v - mu_eff ((z.v) - y) z
+
+    Masked ticks have ``mu_eff = 0`` and compose the identity. Returns
+    ``(a (nc, D, D), v (nc, D))`` f32.
+    """
+    import jax
+
+    if mask is None:
+        mask = jnp.ones(ys.shape, jnp.float32)
+    dfeat = w.shape[-1]
+
+    def per_chunk(xc, yc, mc):
+        zc = rff_features_ref(xc, w, b, s).astype(jnp.float32)  # (Tc, D)
+
+        def tick(carry, zym):
+            a, v = carry
+            z, y, m = zym
+            mu_t = mu / (eps + z @ z) if normalized else mu
+            mu_eff = m * mu_t
+            row = z @ a  # (D,)
+            a = a - mu_eff * jnp.outer(z, row)
+            v = v - mu_eff * ((z @ v) - y) * z
+            return (a, v), None
+
+        init = (
+            jnp.eye(dfeat, dtype=jnp.float32),
+            jnp.zeros((dfeat,), jnp.float32),
+        )
+        (a, v), _ = jax.lax.scan(
+            tick, init, (zc, yc.astype(jnp.float32), mc)
+        )
+        return a, v
+
+    return jax.vmap(per_chunk)(xs, ys, mask.astype(jnp.float32))
+
+
+def krls_chunk_elements_ref(xs, ys, w, b, beta, mask=None, s=None):
+    """Per-chunk composed KRLS decay elements — oracle for
+    kernels/rff_scan.py's ``rff_krls_chunk_elements_pallas``.
+
+    xs (nc, Tc, d), ys (nc, Tc), mask optional (nc, Tc), beta scalar. Each
+    chunk folds its ticks into the information-form accumulator
+
+        g <- beta g;  Phi <- beta Phi + z z^T;  r <- beta r + y z
+
+    with masked ticks composing the identity ``(1, 0, 0)``. Returns
+    ``(g (nc,), phi (nc, D, D), r (nc, D))`` f32.
+    """
+    import jax
+
+    if mask is None:
+        mask = jnp.ones(ys.shape, jnp.float32)
+    dfeat = w.shape[-1]
+
+    def per_chunk(xc, yc, mc):
+        zc = rff_features_ref(xc, w, b, s).astype(jnp.float32)  # (Tc, D)
+
+        def tick(carry, zym):
+            g, phi, r = carry
+            z, y, m = zym
+            beta_eff = jnp.where(m > 0, jnp.float32(beta), 1.0)
+            g = g * beta_eff
+            phi = beta_eff * phi + m * jnp.outer(z, z)
+            r = beta_eff * r + (m * y) * z
+            return (g, phi, r), None
+
+        init = (
+            jnp.ones((), jnp.float32),
+            jnp.zeros((dfeat, dfeat), jnp.float32),
+            jnp.zeros((dfeat,), jnp.float32),
+        )
+        (g, phi, r), _ = jax.lax.scan(
+            tick, init, (zc, yc.astype(jnp.float32), mc)
+        )
+        return g, phi, r
+
+    return jax.vmap(per_chunk)(xs, ys, mask.astype(jnp.float32))
 
 
 def rff_attention_ref(phi_q, phi_k, v, normalize=True, eps=1e-6):

@@ -34,6 +34,7 @@ from repro.core.bank import (
     klms_bank_init,
     krls_bank_chunk_step,
     krls_bank_init,
+    set_tenant_row,
 )
 from repro.features.base import FeatureLike, input_dim
 
@@ -126,6 +127,23 @@ class MicroBatchQueue:
     def backlog(self) -> list[int]:
         """Pending observation count per tenant."""
         return [len(q) for q in self._pending]
+
+    def drop_pending(self, tenant: int) -> int:
+        """Discard ``tenant``'s queued observations (eviction hook).
+
+        Returns the number dropped. Other tenants' backlogs, the bank
+        state, and the served/arrival counters are untouched — a dropped
+        observation was never folded into the state, so no counter lies.
+        """
+        dropped = len(self._pending[tenant])
+        self._pending[tenant].clear()
+        return dropped
+
+    def replace_tenant(self, tenant: int, row) -> None:
+        """Overwrite one tenant's slot of the live bank state in place
+        (readmission hook — ``row`` is a single-tenant state pytree, e.g.
+        from ``core.bank.rebuild_tenant``'s replay or ``tenant_row``)."""
+        self.state = set_tenant_row(self.state, tenant, row)
 
     def _flush_chunk(self) -> int:
         """T for the next flush. Fixed mode always launches ``chunk`` (one

@@ -22,6 +22,15 @@ every ``publish_every`` update-ticks. Reads (the fused query-block kernel,
 Everything stays host-side and synchronous like the queue itself (submit /
 flush / predict compose with any outer event loop; watermarks are checked
 on ``submit`` and via ``maybe_flush`` rather than from a thread).
+
+Tenant lifecycle rides on the same machinery: when a ``log_capacity`` is
+set, every arrival is also appended to a per-tenant :class:`ReplayLog`
+ring buffer, so ``evict(tenant)`` can release the slot as one O(1) row
+write (``core.bank.evict_tenant``) and ``readmit(tenant)`` reconstructs
+the state by replaying the log through the parallel-in-time engine
+(``core.bank.rebuild_tenant`` over core/scan.py) instead of keeping a cold
+copy of the ``(D,)``/``(D, D)`` state around. While evicted, a tenant's
+arrivals are *logged but not trained* — readmission folds them in.
 """
 from __future__ import annotations
 
@@ -32,8 +41,9 @@ from typing import Any, Callable, NamedTuple, Optional, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.bank import bank_predict_block
+from repro.core.bank import bank_predict_block, evict_tenant, rebuild_tenant
 from repro.features.base import FeatureLike
 from repro.serve.queue import (
     MicroBatchQueue,
@@ -42,11 +52,73 @@ from repro.serve.queue import (
 )
 
 __all__ = [
+    "ReplayLog",
     "StateSnapshot",
     "SnapshotServer",
     "klms_snapshot_server",
     "krls_snapshot_server",
 ]
+
+
+class ReplayLog:
+    """Per-tenant ring buffer of raw ``(x, y)`` arrivals for slot rebuilds.
+
+    Capacity bounds host memory: a tenant whose history outgrows the ring
+    loses its oldest ticks, and a rebuild from the log then reconstructs
+    the *windowed* state (fresh init + last ``capacity`` ticks) rather than
+    the full-history one — ``complete(tenant)`` tells callers which
+    contract they are getting. Buffers are plain numpy (host-side, like the
+    queue's pending deques); ``arrays`` materializes one ``(n, d)``/``(n,)``
+    pair for the replay engine.
+    """
+
+    def __init__(self, num_tenants: int, capacity: int, dtype=np.float32):
+        if capacity < 1:
+            raise ValueError("log capacity must be >= 1")
+        self.capacity = capacity
+        self._dtype = np.dtype(dtype)
+        self._buf = [deque(maxlen=capacity) for _ in range(num_tenants)]
+        self.appended = [0] * num_tenants
+
+    def append(self, tenant: int, x, y) -> None:
+        """Record one arrival (evicts the oldest entry when full)."""
+        self.appended[tenant] += 1
+        self._buf[tenant].append(
+            (np.asarray(x, self._dtype), self._dtype.type(y)),
+        )
+
+    def size(self, tenant: int) -> int:
+        """Entries currently held for ``tenant`` (<= capacity)."""
+        return len(self._buf[tenant])
+
+    def dropped(self, tenant: int) -> int:
+        """Arrivals lost to ring overflow since the last ``clear``."""
+        return self.appended[tenant] - len(self._buf[tenant])
+
+    def complete(self, tenant: int) -> bool:
+        """True iff the log still holds the tenant's entire history, i.e.
+        a rebuild from it matches the never-evicted state."""
+        return self.dropped(tenant) == 0
+
+    def arrays(self, tenant: int) -> tuple[np.ndarray, np.ndarray]:
+        """Materialize the log as ``xs (n, d)``, ``ys (n,)`` in arrival
+        order (empty logs yield ``(0, 0)``/``(0,)`` shapes)."""
+        buf = self._buf[tenant]
+        if not buf:
+            return (
+                np.zeros((0, 0), self._dtype),
+                np.zeros((0,), self._dtype),
+            )
+        xs = np.stack([x for x, _ in buf])
+        ys = np.asarray([y for _, y in buf], self._dtype)
+        return xs, ys
+
+    def clear(self, tenant: Optional[int] = None) -> None:
+        """Forget one tenant's history (or every tenant's when None)."""
+        tenants = range(len(self._buf)) if tenant is None else (tenant,)
+        for t in tenants:
+            self._buf[t].clear()
+            self.appended[t] = 0
 
 
 class StateSnapshot(NamedTuple):
@@ -93,6 +165,15 @@ class SnapshotServer:
       size_watermark: observations — flush when any tenant's backlog
         reaches this depth.
       clock: injectable monotonic clock (tests pass a fake).
+      log_capacity: entries per tenant in the :class:`ReplayLog` ring
+        buffer. None (default) disables logging — ``evict`` still works
+        (the slot parks a fresh row) but ``readmit`` can only restart the
+        tenant cold.
+      evict_fn: ``(state, tenant) -> state`` releasing one slot; defaults
+        to ``core.bank.evict_tenant`` with its family-inferred fresh row.
+      rebuild_fn: ``(state, tenant, xs, ys) -> state`` replaying a log
+        into one slot; the factories wire ``core.bank.rebuild_tenant``
+        closures carrying the family hyperparameters and replay mode.
     """
 
     def __init__(
@@ -106,6 +187,9 @@ class SnapshotServer:
         age_watermark: Optional[float] = None,
         size_watermark: Optional[int] = None,
         clock: Callable[[], float] = time.monotonic,
+        log_capacity: Optional[int] = None,
+        evict_fn: Optional[Callable] = None,
+        rebuild_fn: Optional[Callable] = None,
     ):
         if publish_every < 1:
             raise ValueError("publish_every must be >= 1")
@@ -119,6 +203,14 @@ class SnapshotServer:
         self._clock = clock
         self._arrival_times = [deque() for _ in range(queue.num_tenants)]
         self._snapshot = StateSnapshot(state=queue.state, version=0, tick=0)
+        self.log = (
+            ReplayLog(queue.num_tenants, log_capacity, queue._dtype)
+            if log_capacity is not None
+            else None
+        )
+        self._evict_fn = evict_fn if evict_fn is not None else evict_tenant
+        self._rebuild_fn = rebuild_fn
+        self._evicted: set[int] = set()
 
     # -- read path ---------------------------------------------------------
 
@@ -165,7 +257,17 @@ class SnapshotServer:
     # -- write path --------------------------------------------------------
 
     def submit(self, tenant: int, x, y) -> None:
-        """Enqueue one observation; flush if a watermark trips."""
+        """Enqueue one observation; flush if a watermark trips.
+
+        Every arrival is also appended to the replay log (when one is
+        configured). An *evicted* tenant's arrivals stop here: they are
+        logged but never queued, so the released slot stays untrained
+        until :meth:`readmit` folds the whole log back in.
+        """
+        if self.log is not None:
+            self.log.append(tenant, x, y)
+        if tenant in self._evicted:
+            return
         # Tag the arrival with its backlog position, not just a count:
         # observations submitted straight to the queue (legal; they opt out
         # of the age watermark) occupy positions too, and a flush must
@@ -224,6 +326,59 @@ class SnapshotServer:
                 merged.setdefault(tenant, []).extend(served)
         return merged
 
+    # -- tenant lifecycle --------------------------------------------------
+
+    @property
+    def evicted(self) -> frozenset[int]:
+        """Tenants whose slots are currently released."""
+        return frozenset(self._evicted)
+
+    def evict(self, tenant: int) -> int:
+        """Release one bank slot: drop the tenant's pending observations,
+        park a fresh row in the slot (O(1) — ``core.bank.evict_tenant``),
+        and publish so readers stop seeing the old weights immediately.
+
+        The replay log is *kept*: it is the only record :meth:`readmit`
+        rebuilds from. Returns the number of pending observations dropped
+        (they were logged on submit, so readmission still replays them).
+        """
+        dropped = self.queue.drop_pending(tenant)
+        self._arrival_times[tenant].clear()
+        self.queue.state = self._evict_fn(self.queue.state, tenant)
+        self._evicted.add(tenant)
+        self.publish()
+        return dropped
+
+    def readmit(self, tenant: int, mode: Optional[str] = None) -> int:
+        """Re-admit an evicted tenant by replaying its log into the slot.
+
+        The rebuild runs through ``rebuild_fn`` (the factories wire
+        ``core.bank.rebuild_tenant`` -> core/scan.py, so the slot is
+        reconstructed in O(log T) scan depth rather than T sequential
+        ticks), then a fresh replica is published. With no log or an empty
+        one the tenant simply restarts cold on the parked fresh row.
+        Returns the number of ticks replayed. If the ring overflowed
+        (``log.complete(tenant)`` is False) the rebuilt state is the
+        windowed one — fresh init + the last ``capacity`` ticks.
+        """
+        if tenant not in self._evicted:
+            raise ValueError(f"tenant {tenant} is not evicted")
+        replayed = 0
+        if self.log is not None and self.log.size(tenant):
+            if self._rebuild_fn is None:
+                raise ValueError(
+                    "readmit with a non-empty log needs a rebuild_fn "
+                    "(use the klms/krls factories or pass one)"
+                )
+            xs, ys = self.log.arrays(tenant)
+            self.queue.state = self._rebuild_fn(
+                self.queue.state, tenant, xs, ys
+            )
+            replayed = len(ys)
+        self._evicted.discard(tenant)
+        self.publish()
+        return replayed
+
     def reset(self, state) -> None:
         """Restart both buffers on a fresh bank state (tenant-eviction /
         benchmark hook): the live queue state AND the published replica
@@ -234,6 +389,9 @@ class SnapshotServer:
         self.queue.ticks_served = 0
         self._arrival_times = [deque() for _ in range(self.queue.num_tenants)]
         self._snapshot = StateSnapshot(state=state, version=0, tick=0)
+        if self.log is not None:
+            self.log.clear()
+        self._evicted.clear()
 
     def publish(self) -> StateSnapshot:
         """Swap the read replica to the live state (atomic: one reference
@@ -255,11 +413,22 @@ def klms_snapshot_server(
     mode: str = "auto",
     precision: Optional[str] = None,
     adaptive: bool = False,
+    rebuild_mode: str = "scan",
     **kw,
 ) -> SnapshotServer:
-    """Ready-to-serve snapshot-decoupled KLMS bank server."""
+    """Ready-to-serve snapshot-decoupled KLMS bank server.
+
+    Pass ``log_capacity=`` to enable the eviction/readmission lifecycle;
+    ``rebuild_mode`` selects the replay schedule a readmission uses
+    ("scan" / "blocked" / "sequential")."""
     queue = klms_micro_batch_queue(
         rff, num_tenants, mu=mu, chunk=chunk, mode=mode, adaptive=adaptive
+    )
+    kw.setdefault(
+        "rebuild_fn",
+        lambda state, tenant, xs, ys: rebuild_tenant(
+            state, tenant, rff, xs, ys, mu=mu, mode=rebuild_mode
+        ),
     )
     return SnapshotServer(
         queue, rff, publish_every, mode=mode, precision=precision, **kw
@@ -276,9 +445,13 @@ def krls_snapshot_server(
     mode: str = "auto",
     precision: Optional[str] = None,
     adaptive: bool = False,
+    rebuild_mode: str = "scan",
     **kw,
 ) -> SnapshotServer:
-    """Ready-to-serve snapshot-decoupled KRLS bank server."""
+    """Ready-to-serve snapshot-decoupled KRLS bank server.
+
+    Pass ``log_capacity=`` to enable the eviction/readmission lifecycle;
+    an evicted slot parks ``P_0 = I/lam`` (per-tenant ``lam`` honored)."""
     queue = krls_micro_batch_queue(
         rff,
         num_tenants,
@@ -287,6 +460,16 @@ def krls_snapshot_server(
         chunk=chunk,
         mode=mode,
         adaptive=adaptive,
+    )
+    kw.setdefault(
+        "evict_fn",
+        lambda state, tenant: evict_tenant(state, tenant, lam=lam),
+    )
+    kw.setdefault(
+        "rebuild_fn",
+        lambda state, tenant, xs, ys: rebuild_tenant(
+            state, tenant, rff, xs, ys, lam=lam, beta=beta, mode=rebuild_mode
+        ),
     )
     return SnapshotServer(
         queue, rff, publish_every, mode=mode, precision=precision, **kw
