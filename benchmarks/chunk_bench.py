@@ -93,11 +93,7 @@ def bench_chunk_dispatch(
 
     from repro.core.bank import klms_bank_init, krls_bank_init
     from repro.core.rff import sample_rff
-    from repro.serve.bank_loop import make_bank_server, make_krls_bank_server
-    from repro.serve.queue import (
-        make_chunked_bank_server,
-        make_chunked_krls_bank_server,
-    )
+    from repro.serve.api import make_chunk_step, make_tick
 
     rff = sample_rff(jax.random.PRNGKey(0), d, dfeat, sigma=2.0)
     ks = jax.random.split(jax.random.PRNGKey(1), 2)
@@ -105,13 +101,13 @@ def bench_chunk_dispatch(
     ys = jax.random.normal(ks[1], (bank, n_ticks))
     if algo == "klms":
         state = klms_bank_init(rff, bank)
-        tick = make_bank_server(rff, 0.5, mode="auto")
-        chunk_srv = make_chunked_bank_server(rff, 0.5, mode="auto")
+        tick = make_tick("klms", rff, mode="auto", mu=0.5)
+        chunk_srv = make_chunk_step("klms", rff, mode="auto", mu=0.5)
         model = klms_chunk_bytes_per_tick
     else:
         state = krls_bank_init(rff, bank, lam=1e-2)
-        tick = make_krls_bank_server(rff, 0.9995, mode="auto")
-        chunk_srv = make_chunked_krls_bank_server(rff, 0.9995, mode="auto")
+        tick = make_tick("krls", rff, mode="auto", beta=0.9995)
+        chunk_srv = make_chunk_step("krls", rff, mode="auto", beta=0.9995)
         model = krls_chunk_bytes_per_tick
 
     # Host-side pre-split so each timed call is pure dispatch + compute

@@ -39,6 +39,7 @@ from benchmarks import (
     replay_bench,
     roofline_report,
     serve_bench,
+    zipf_bench,
 )
 
 # bench name -> which BENCH_<family>.json it persists to.
@@ -70,6 +71,7 @@ DELEGATED = {
     "features": features_bench.main,
     "replay": replay_bench.main,
     "serve": serve_bench.main,
+    "zipf": zipf_bench.main,
 }
 
 

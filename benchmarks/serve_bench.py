@@ -161,13 +161,12 @@ def bench_read_write_mix(
     from repro.core.bank import bank_predict, klms_bank_init
     from repro.core.learner import klms_learner
     from repro.core.rff import sample_rff
-    from repro.serve.bank_loop import make_bank_server
-    from repro.serve.snapshot import klms_snapshot_server
+    from repro.serve.api import make_server, make_tick
 
     rff = sample_rff(jax.random.PRNGKey(0), d, dfeat, sigma=2.0)
     learner = klms_learner(rff, 0.5)
     adapter = jax.jit(lambda s, x: bank_predict(learner, s, x))
-    tick = make_bank_server(rff, 0.5, mode="auto")
+    tick = make_tick("klms", rff, mode="auto", mu=0.5)
 
     rng = np.random.RandomState(0)
     xs = rng.randn(n_writes, bank, d).astype(np.float32)
@@ -175,9 +174,10 @@ def bench_read_write_mix(
     init_state = klms_bank_init(rff, bank)
     # One server for the whole sweep (its jitted chunk/predict programs
     # trace once); each timed run restarts it on the fresh init state.
-    srv = klms_snapshot_server(
-        rff, bank, mu=0.5, chunk=chunk, publish_every=chunk, mode="auto"
-    )
+    srv = make_server(
+        "klms", feature_map=rff, bank=bank, mu=0.5, chunk=chunk,
+        publish_every=chunk, mode="auto",
+    ).snapshot_server
 
     records = []
     for ratio in ratios:

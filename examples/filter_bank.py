@@ -14,7 +14,7 @@ import jax.numpy as jnp
 
 from repro.core import klms_learner, sample_rff
 from repro.core.bank import bank_init, bank_run
-from repro.serve import make_bank_server, serve_bank_stream
+from repro.serve import make_tick, run_stream
 from repro.data.synthetic import gen_nonlinear_wiener
 
 
@@ -29,14 +29,14 @@ def main():
     xs = xs_all.reshape(bank, n, -1)
     ys = ys_all.reshape(bank, n)
 
-    final, outs = serve_bank_stream(rff, xs, ys, mu=0.5)
+    final, outs = run_stream("klms", rff, xs, ys, mu=0.5)
     tail_mse = jnp.mean(outs.error[:, -200:] ** 2, axis=1)
     print(f"{bank} tenants, {n} ticks each, one jitted call")
     print(f"  tail MSE: mean={float(jnp.mean(tail_mse)):.4f} "
           f"worst={float(jnp.max(tail_mse)):.4f}")
 
     # --- per-tick serving (the online loop a real server runs) -----------
-    tick = make_bank_server(rff, mu=0.5)
+    tick = make_tick("klms", rff, mu=0.5)
     state = jax.tree.map(jnp.zeros_like, final)
     for t in range(3):
         state, out = tick(state, xs[:, t], ys[:, t])
@@ -47,7 +47,7 @@ def main():
     mus = jnp.linspace(0.05, 1.5, bank)
     xs_rep = jnp.broadcast_to(xs[0], (bank,) + xs[0].shape)
     ys_rep = jnp.broadcast_to(ys[0], (bank,) + ys[0].shape)
-    _, sweep = serve_bank_stream(rff, xs_rep, ys_rep, mu=mus)
+    _, sweep = run_stream("klms", rff, xs_rep, ys_rep, mu=mus)
     sweep_mse = jnp.mean(sweep.error[:, -200:] ** 2, axis=1)
     best = int(jnp.argmin(sweep_mse))
     print(f"mu sweep over {bank} candidates in one pass: "

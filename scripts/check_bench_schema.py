@@ -29,6 +29,48 @@ import sys
 
 SHARED_KEYS = {"suite": str, "backend": str, "records": list}
 
+# The zipf suite (benchmarks/zipf_bench.py) additionally promises the
+# policy-comparison columns the README documents: percentile latencies and
+# hit-rate per record, and (for the committed full-shape baseline) coverage
+# of >= 3 Zipf alphas and >= 2 bank:tenant ratios. Smoke artifacts keep the
+# per-record contract but may cover a single tiny config.
+ZIPF_RECORD_KEYS = ("policy", "alpha", "ratio", "hit_rate", "write_us",
+                    "read_us")
+ZIPF_MIN_ALPHAS = 3
+ZIPF_MIN_RATIOS = 2
+
+
+def check_zipf(path: str, payload: dict) -> list[str]:
+    """Zipf-suite-specific validation (called for suite == "zipf")."""
+    errors = []
+    records = [r for r in payload.get("records", []) if isinstance(r, dict)]
+    for i, rec in enumerate(records):
+        for key in ZIPF_RECORD_KEYS:
+            if key not in rec:
+                errors.append(f"{path}: records[{i}] missing {key!r}")
+        for col in ("write_us", "read_us"):
+            h = rec.get(col)
+            if isinstance(h, dict):
+                for p in ("p50", "p95", "p99"):
+                    if p not in h:
+                        errors.append(
+                            f"{path}: records[{i}].{col} missing {p!r}"
+                        )
+    if not payload.get("tiny"):
+        alphas = {r.get("alpha") for r in records} - {None}
+        ratios = {r.get("ratio") for r in records} - {None}
+        if len(alphas) < ZIPF_MIN_ALPHAS:
+            errors.append(
+                f"{path}: baseline covers {len(alphas)} alphas, "
+                f"needs >= {ZIPF_MIN_ALPHAS}"
+            )
+        if len(ratios) < ZIPF_MIN_RATIOS:
+            errors.append(
+                f"{path}: baseline covers {len(ratios)} bank:tenant "
+                f"ratios, needs >= {ZIPF_MIN_RATIOS}"
+            )
+    return errors
+
 
 def check_file(path: str) -> list[str]:
     """Return the schema violations for one BENCH_*.json (empty = OK)."""
@@ -57,6 +99,8 @@ def check_file(path: str) -> list[str]:
                 errors.append(f"{path}: records[{i}] is not an object")
             elif "bench" not in rec:
                 errors.append(f"{path}: records[{i}] missing 'bench'")
+    if payload.get("suite") == "zipf":
+        errors.extend(check_zipf(path, payload))
     return errors
 
 

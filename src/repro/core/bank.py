@@ -77,6 +77,8 @@ __all__ = [
     "set_tenant_row",
     "evict_tenant",
     "rebuild_tenant",
+    "bank_size",
+    "resize_bank",
 ]
 
 
@@ -735,6 +737,48 @@ def evict_tenant(state, tenant: int, init_row=None, lam: Union[float, jax.Array]
     if init_row is None:
         init_row = _fresh_row(state, lam, tenant)
     return set_tenant_row(state, tenant, init_row)
+
+
+def bank_size(state) -> int:
+    """Number of slots B (the leading bank axis of every state leaf)."""
+    return int(jax.tree.leaves(state)[0].shape[0])
+
+
+def resize_bank(
+    state,
+    new_size: int,
+    fresh_row=None,
+    lam: Union[float, jax.Array] = 1e-4,
+):
+    """Grow or shrink the bank's leading axis to ``new_size`` slots.
+
+    Growth appends fresh single-learner rows (``fresh_row``, defaulting to
+    the family-inferred init — zero theta for LMS banks, ``P_0 = I/lam``
+    for RLS banks); existing rows are untouched, so resident tenants are
+    bitwise-preserved. Shrink slices the first ``new_size`` rows — the
+    caller (the serve policy tier) is responsible for compacting live
+    tenants below ``new_size`` first via :func:`tenant_row` /
+    :func:`set_tenant_row`. The resulting state retraces downstream jitted
+    programs once per distinct size, which is why the policy tier resizes
+    in pow2 steps.
+    """
+    size = bank_size(state)
+    if new_size < 1:
+        raise ValueError("bank must keep at least one slot")
+    if new_size == size:
+        return state
+    if new_size < size:
+        return jax.tree.map(lambda a: a[:new_size], state)
+    if fresh_row is None:
+        fresh_row = _fresh_row(state, lam)
+
+    def grow(a, r):
+        pad = jnp.broadcast_to(
+            jnp.asarray(r, a.dtype), (new_size - size,) + a.shape[1:]
+        )
+        return jnp.concatenate([a, pad], axis=0)
+
+    return jax.tree.map(grow, state, fresh_row)
 
 
 def rebuild_tenant(

@@ -1,43 +1,21 @@
-"""Serving loop for the online filter bank (multi-tenant kernel regression).
+"""Deprecated lockstep serving entry points (pre-facade names).
 
-The LM loop in serve_loop.py drives a decode state; this drives the other
-fixed-size state in the repo — a bank of B online kernel filters, one per
-tenant stream. Each tick every tenant delivers one ``(x, y)`` observation;
-the server answers with the prior prediction (made *before* seeing ``y`` —
-the honest online quantity) and folds the observation into its state via the
-fused Pallas KLMS step. Fixed-size state means admission is O(1): a tenant
-slot is a ``(D,)`` row, reset by zeroing it.
-
-``make_bank_server`` returns the one-tick function (jit-compiled once,
-reused every tick); ``serve_bank_stream`` scans a whole ``(B, n)`` traffic
-matrix through it under a single jit — the benchmark's "≥64 concurrent
-streams, one jitted call" path.
-
-Every server accepts any :mod:`repro.features` map — deterministic GQ/QMC
-families give variance-free serving (two replicas constructed from the same
-config predict identically, no seed coordination needed); non-trig families
-run through the generic bank fallback automatically.
-
-KRLS tenants (``make_krls_bank_server`` / ``serve_krls_bank_stream``) get
-the same treatment through the fused RLS bank kernel: per-tenant state is a
-``(D,)`` theta plus a ``(D, D)`` inverse correlation, still fixed-size, so
-admission stays O(1) — a slot reset re-seeds theta to zero and P to
-``I / lam`` (``reset_krls_tenants``).
+The per-family factories that used to live here — ``make_bank_server`` /
+``make_krls_bank_server``, ``serve_bank_stream`` /
+``serve_krls_bank_stream``, ``reset_tenants`` / ``reset_krls_tenants`` —
+are now thin deprecation shims over the learner-parameterized facade in
+serve/api.py (:func:`repro.serve.make_tick`, :func:`repro.serve.run_stream`,
+:func:`repro.serve.reset_slots`). Each shim preserves its historical
+signature and bitwise behavior (equivalence-tested in
+tests/test_serve_api.py) and emits one :class:`DeprecationWarning` per
+process. New code should call the facade directly.
 """
 from __future__ import annotations
 
-import functools
 from typing import Callable, Optional, Union
 
 import jax
-import jax.numpy as jnp
 
-from repro.core.bank import (
-    klms_bank_run,
-    klms_bank_step,
-    krls_bank_run,
-    krls_bank_step,
-)
 from repro.core.klms import LMSState, StepOut
 from repro.core.krls import RLSState
 from repro.features.base import FeatureLike
@@ -55,17 +33,13 @@ __all__ = [
 def make_bank_server(
     rff: FeatureLike, mu: Union[float, jax.Array], mode: str = "auto"
 ) -> Callable[[LMSState, jax.Array, jax.Array], tuple[LMSState, StepOut]]:
-    """Build the jitted per-tick server: ``(state, xs (B,d), ys (B,)) ->
-    (state, StepOut)``. Compile once, call per tick."""
+    """Deprecated: use ``repro.serve.make_tick("klms", ...)``."""
+    from repro.serve import api
 
-    @jax.jit
-    def tick(state: LMSState, xs: jax.Array, ys: jax.Array):
-        return klms_bank_step(state, xs, ys, rff, mu, mode=mode)
-
-    return tick
+    api._deprecated("make_bank_server", 'make_tick("klms", ...)')
+    return api.make_tick("klms", rff, mode=mode, mu=mu)
 
 
-@functools.partial(jax.jit, static_argnames=("mode", "chunk"))
 def serve_bank_stream(
     rff: FeatureLike,
     xs: jax.Array,
@@ -75,39 +49,33 @@ def serve_bank_stream(
     mode: str = "auto",
     chunk: Optional[int] = None,
 ) -> tuple[LMSState, StepOut]:
-    """Serve B tenant streams ``xs (B, n, d)``, ``ys (B, n)`` in one jit.
+    """Deprecated: use ``repro.serve.run_stream("klms", ...)``."""
+    from repro.serve import api
 
-    ``chunk=T`` drives the time-blocked kernel schedule (one launch per T
-    ticks) instead of the per-tick scan — same trajectory, fewer dispatches.
-    """
-    return klms_bank_run(rff, xs, ys, mu, state=state, mode=mode, chunk=chunk)
+    api._deprecated("serve_bank_stream", 'run_stream("klms", ...)')
+    return api.run_stream(
+        "klms", rff, xs, ys, state=state, mode=mode, chunk=chunk, mu=mu
+    )
 
 
 def reset_tenants(state: LMSState, slots: jax.Array) -> LMSState:
-    """Zero the given tenant rows (churn: admit a new tenant into a slot).
+    """Deprecated: use ``repro.serve.reset_slots(state, slots)``."""
+    from repro.serve import api
 
-    ``slots`` is an int array of bank indices; O(1) per tenant because the
-    per-tenant state is a fixed-size row, never a grown dictionary.
-    """
-    theta = state.theta.at[slots].set(0.0)
-    step = state.step.at[slots].set(0)
-    return LMSState(theta=theta, step=step)
+    api._deprecated("reset_tenants", "reset_slots(state, slots)")
+    return api.reset_slots(state, slots, learner="klms")
 
 
 def make_krls_bank_server(
     rff: FeatureLike, beta: Union[float, jax.Array] = 0.9995, mode: str = "auto"
 ) -> Callable[[RLSState, jax.Array, jax.Array], tuple[RLSState, StepOut]]:
-    """Jitted per-tick KRLS server: ``(state, xs (B,d), ys (B,)) ->
-    (state, StepOut)`` through the fused RLS bank kernel."""
+    """Deprecated: use ``repro.serve.make_tick("krls", ...)``."""
+    from repro.serve import api
 
-    @jax.jit
-    def tick(state: RLSState, xs: jax.Array, ys: jax.Array):
-        return krls_bank_step(state, xs, ys, rff, beta, mode=mode)
-
-    return tick
+    api._deprecated("make_krls_bank_server", 'make_tick("krls", ...)')
+    return api.make_tick("krls", rff, mode=mode, beta=beta)
 
 
-@functools.partial(jax.jit, static_argnames=("mode", "chunk"))
 def serve_krls_bank_stream(
     rff: FeatureLike,
     xs: jax.Array,
@@ -118,24 +86,23 @@ def serve_krls_bank_stream(
     mode: str = "auto",
     chunk: Optional[int] = None,
 ) -> tuple[RLSState, StepOut]:
-    """Serve B KRLS tenant streams ``xs (B, n, d)``, ``ys (B, n)``.
+    """Deprecated: use ``repro.serve.run_stream("krls", ...)``."""
+    from repro.serve import api
 
-    ``chunk=T`` selects the time-blocked kernel schedule (see
-    :func:`serve_bank_stream`).
-    """
-    return krls_bank_run(
-        rff, xs, ys, lam=lam, beta=beta, state=state, mode=mode, chunk=chunk
+    api._deprecated("serve_krls_bank_stream", 'run_stream("krls", ...)')
+    return api.run_stream(
+        "krls", rff, xs, ys, state=state, mode=mode, chunk=chunk,
+        lam=lam, beta=beta,
     )
 
 
 def reset_krls_tenants(
     state: RLSState, slots: jax.Array, lam: float = 1e-4
 ) -> RLSState:
-    """Re-admit KRLS tenants: theta -> 0, P -> I/lam, step -> 0 per slot."""
-    dfeat = state.theta.shape[-1]
-    theta = state.theta.at[slots].set(0.0)
-    pmat = state.pmat.at[slots].set(
-        jnp.eye(dfeat, dtype=state.pmat.dtype) / lam
+    """Deprecated: use ``repro.serve.reset_slots(..., lam=lam)``."""
+    from repro.serve import api
+
+    api._deprecated(
+        "reset_krls_tenants", 'reset_slots(state, slots, learner="krls")'
     )
-    step = state.step.at[slots].set(0)
-    return RLSState(theta=theta, pmat=pmat, step=step)
+    return api.reset_slots(state, slots, learner="krls", lam=lam)

@@ -1,0 +1,143 @@
+"""Lightweight serving metrics: counters, gauges, log-bucketed histograms.
+
+The policy tier (serve/policy.py) and the serving facade (serve/api.py)
+need to answer "what happens when tenants ≫ slots" with *numbers* —
+evictions, readmissions, admission rejects, queue backlog, and the
+per-request latency distribution under skewed load. This module is the
+smallest registry that supports that: pure host-side Python (no jax, no
+locks — the serve path is single-threaded like the queue it instruments),
+O(1) per observation, and a ``snapshot()`` that renders everything to a
+plain JSON-able dict for the Zipf benchmark's ``BENCH_zipf.json`` records.
+
+Histograms use fixed geometric (base-2) buckets so a latency observation
+costs one ``bit_length`` — no sorting, no reservoir — and percentiles are
+estimated by linear interpolation inside the winning bucket (resolution is
+one octave, which is plenty for p50/p95/p99 columns whose purpose is
+trajectory tracking, not microsecond forensics). Exact min/max are kept so
+the tails of the estimate never leave the observed range.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+__all__ = ["Counter", "Histogram", "MetricsRegistry"]
+
+
+class Counter:
+    """Monotonic event counter."""
+
+    __slots__ = ("value",)
+
+    def __init__(self) -> None:
+        self.value = 0
+
+    def inc(self, n: int = 1) -> None:
+        self.value += n
+
+
+class Histogram:
+    """Geometric-bucket histogram over non-negative observations.
+
+    Bucket ``i`` holds values in ``[2**(i-1), 2**i)`` (bucket 0 holds
+    ``[0, 1)``), measured in whatever unit the caller observes — the serve
+    facade records microseconds. ``percentile`` walks the cumulative
+    counts and interpolates linearly within the target bucket, clamped to
+    the exact observed ``[min, max]``.
+    """
+
+    __slots__ = ("counts", "count", "total", "min", "max")
+
+    def __init__(self, max_buckets: int = 40) -> None:
+        self.counts = [0] * max_buckets
+        self.count = 0
+        self.total = 0.0
+        self.min: Optional[float] = None
+        self.max: Optional[float] = None
+
+    def observe(self, value: float) -> None:
+        v = max(0.0, float(value))
+        idx = min(len(self.counts) - 1, int(v).bit_length())
+        self.counts[idx] += 1
+        self.count += 1
+        self.total += v
+        self.min = v if self.min is None else min(self.min, v)
+        self.max = v if self.max is None else max(self.max, v)
+
+    @property
+    def mean(self) -> float:
+        return self.total / self.count if self.count else 0.0
+
+    def percentile(self, q: float) -> float:
+        """Estimated q-th percentile (``q`` in [0, 100])."""
+        if not self.count:
+            return 0.0
+        target = q / 100.0 * self.count
+        seen = 0
+        for i, c in enumerate(self.counts):
+            if not c:
+                continue
+            if seen + c >= target:
+                lo = 0.0 if i == 0 else float(2 ** (i - 1))
+                hi = float(2**i)
+                frac = (target - seen) / c
+                est = lo + frac * (hi - lo)
+                return min(max(est, self.min), self.max)
+            seen += c
+        return self.max  # pragma: no cover - target <= count by construction
+
+    def summary(self) -> dict:
+        return {
+            "count": self.count,
+            "mean": self.mean,
+            "min": self.min if self.min is not None else 0.0,
+            "max": self.max if self.max is not None else 0.0,
+            "p50": self.percentile(50),
+            "p95": self.percentile(95),
+            "p99": self.percentile(99),
+        }
+
+
+class MetricsRegistry:
+    """Name -> metric registry with create-on-first-use semantics.
+
+    One registry instruments one server; ``snapshot()`` is the stable
+    export format (plain dict) the Zipf bench embeds per record::
+
+        {"counters": {name: int}, "gauges": {name: float},
+         "histograms": {name: {count, mean, min, max, p50, p95, p99}}}
+    """
+
+    def __init__(self) -> None:
+        self._counters: dict[str, Counter] = {}
+        self._gauges: dict[str, float] = {}
+        self._histograms: dict[str, Histogram] = {}
+
+    def counter(self, name: str) -> Counter:
+        if name not in self._counters:
+            self._counters[name] = Counter()
+        return self._counters[name]
+
+    def histogram(self, name: str) -> Histogram:
+        if name not in self._histograms:
+            self._histograms[name] = Histogram()
+        return self._histograms[name]
+
+    def set_gauge(self, name: str, value: float) -> None:
+        self._gauges[name] = float(value)
+
+    def gauge(self, name: str, default: float = 0.0) -> float:
+        return self._gauges.get(name, default)
+
+    def count(self, name: str) -> int:
+        """Current value of a counter (0 if never incremented)."""
+        c = self._counters.get(name)
+        return c.value if c is not None else 0
+
+    def snapshot(self) -> dict:
+        return {
+            "counters": {k: c.value for k, c in sorted(self._counters.items())},
+            "gauges": dict(sorted(self._gauges.items())),
+            "histograms": {
+                k: h.summary() for k, h in sorted(self._histograms.items())
+            },
+        }

@@ -29,14 +29,8 @@ from typing import Callable, Union
 import jax
 import numpy as np
 
-from repro.core.bank import (
-    klms_bank_chunk_step,
-    klms_bank_init,
-    krls_bank_chunk_step,
-    krls_bank_init,
-    set_tenant_row,
-)
-from repro.features.base import FeatureLike, input_dim
+from repro.core.bank import set_tenant_row
+from repro.features.base import FeatureLike
 
 __all__ = [
     "MicroBatchQueue",
@@ -52,14 +46,13 @@ def make_chunked_bank_server(
     mu: Union[float, jax.Array],
     mode: str = "auto",
 ) -> Callable:
-    """Jitted chunked KLMS server: ``(state, xs (B, T, d), ys (B, T),
-    mask (B, T)) -> (state, StepOut (B, T))`` — one launch per chunk."""
+    """Deprecated: use ``repro.serve.make_chunk_step("klms", ...)``."""
+    from repro.serve import api
 
-    @jax.jit
-    def tick(state, xs, ys, mask):
-        return klms_bank_chunk_step(state, xs, ys, rff, mu, mask, mode=mode)
-
-    return tick
+    api._deprecated(
+        "make_chunked_bank_server", 'make_chunk_step("klms", ...)'
+    )
+    return api.make_chunk_step("klms", rff, mode=mode, mu=mu)
 
 
 def make_chunked_krls_bank_server(
@@ -67,14 +60,13 @@ def make_chunked_krls_bank_server(
     beta: Union[float, jax.Array] = 0.9995,
     mode: str = "auto",
 ) -> Callable:
-    """Jitted chunked KRLS server: same contract as
-    :func:`make_chunked_bank_server` over ``(theta, P)`` tenant state."""
+    """Deprecated: use ``repro.serve.make_chunk_step("krls", ...)``."""
+    from repro.serve import api
 
-    @jax.jit
-    def tick(state, xs, ys, mask):
-        return krls_bank_chunk_step(state, xs, ys, rff, beta, mask, mode=mode)
-
-    return tick
+    api._deprecated(
+        "make_chunked_krls_bank_server", 'make_chunk_step("krls", ...)'
+    )
+    return api.make_chunk_step("krls", rff, mode=mode, beta=beta)
 
 
 class MicroBatchQueue:
@@ -139,6 +131,36 @@ class MicroBatchQueue:
         self._pending[tenant].clear()
         return dropped
 
+    def move_slot(self, src: int, dst: int) -> None:
+        """Transfer one slot's pending backlog and arrival counter to
+        another slot (bank-compaction hook — the state row itself moves
+        via ``tenant_row``/``set_tenant_row``). ``src`` is left empty."""
+        if src == dst:
+            return
+        self._pending[dst] = self._pending[src]
+        self._pending[src] = deque()
+        self.arrivals[dst] = self.arrivals[src]
+        self.arrivals[src] = 0
+
+    def adopt(self, state) -> None:
+        """Adopt a resized bank state (``core.bank.resize_bank``):
+        re-derive B and grow/shrink the per-slot buffers with it. Slots
+        being truncated must have empty backlogs — compact first."""
+        new_b = int(jax.tree.leaves(state)[0].shape[0])
+        if any(len(q) for q in self._pending[new_b:]):
+            raise RuntimeError(
+                "resize would drop pending observations; compact or drain"
+            )
+        self.state = state
+        if new_b >= self.num_tenants:
+            grow = new_b - self.num_tenants
+            self._pending.extend(deque() for _ in range(grow))
+            self.arrivals.extend([0] * grow)
+        else:
+            self._pending = self._pending[:new_b]
+            self.arrivals = self.arrivals[:new_b]
+        self.num_tenants = new_b
+
     def replace_tenant(self, tenant: int, row) -> None:
         """Overwrite one tenant's slot of the live bank state in place
         (readmission hook — ``row`` is a single-tenant state pytree, e.g.
@@ -202,15 +224,15 @@ def klms_micro_batch_queue(
     state=None,
     adaptive: bool = False,
 ) -> MicroBatchQueue:
-    """Ready-to-serve KLMS queue: fresh bank state + jitted chunk server."""
-    if state is None:
-        state = klms_bank_init(rff, num_tenants)
-    return MicroBatchQueue(
-        make_chunked_bank_server(rff, mu, mode=mode),
-        state,
-        input_dim(rff),
-        chunk=chunk,
-        adaptive=adaptive,
+    """Deprecated: use ``repro.serve.make_queue("klms", ...)``."""
+    from repro.serve import api
+
+    api._deprecated(
+        "klms_micro_batch_queue", 'make_queue("klms", ...)'
+    )
+    return api.make_queue(
+        "klms", rff, num_tenants, chunk=chunk, mode=mode, state=state,
+        adaptive=adaptive, mu=mu,
     )
 
 
@@ -224,13 +246,13 @@ def krls_micro_batch_queue(
     state=None,
     adaptive: bool = False,
 ) -> MicroBatchQueue:
-    """Ready-to-serve KRLS queue: fresh bank state + jitted chunk server."""
-    if state is None:
-        state = krls_bank_init(rff, num_tenants, lam)
-    return MicroBatchQueue(
-        make_chunked_krls_bank_server(rff, beta, mode=mode),
-        state,
-        input_dim(rff),
-        chunk=chunk,
-        adaptive=adaptive,
+    """Deprecated: use ``repro.serve.make_queue("krls", ...)``."""
+    from repro.serve import api
+
+    api._deprecated(
+        "krls_micro_batch_queue", 'make_queue("krls", ...)'
+    )
+    return api.make_queue(
+        "krls", rff, num_tenants, chunk=chunk, mode=mode, state=state,
+        adaptive=adaptive, lam=lam, beta=beta,
     )

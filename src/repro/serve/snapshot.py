@@ -45,11 +45,7 @@ import numpy as np
 
 from repro.core.bank import bank_predict_block, evict_tenant, rebuild_tenant
 from repro.features.base import FeatureLike
-from repro.serve.queue import (
-    MicroBatchQueue,
-    klms_micro_batch_queue,
-    krls_micro_batch_queue,
-)
+from repro.serve.queue import MicroBatchQueue
 
 __all__ = [
     "ReplayLog",
@@ -70,30 +66,43 @@ class ReplayLog:
     contract they are getting. Buffers are plain numpy (host-side, like the
     queue's pending deques); ``arrays`` materializes one ``(n, d)``/``(n,)``
     pair for the replay engine.
+
+    Keys are arbitrary ints materialized on first append — slot indices on
+    the snapshot tier, unbounded tenant *ids* on the policy tier
+    (serve/api.py), which is why storage is a dict rather than a
+    slot-indexed list. ``num_tenants`` is accepted for signature
+    compatibility but no longer pre-sizes anything.
     """
 
-    def __init__(self, num_tenants: int, capacity: int, dtype=np.float32):
+    def __init__(self, num_tenants: int = 0, capacity: int = 256,
+                 dtype=np.float32):
         if capacity < 1:
             raise ValueError("log capacity must be >= 1")
         self.capacity = capacity
         self._dtype = np.dtype(dtype)
-        self._buf = [deque(maxlen=capacity) for _ in range(num_tenants)]
-        self.appended = [0] * num_tenants
+        self._buf: dict[int, deque] = {}
+        self._appended: dict[int, int] = {}
 
     def append(self, tenant: int, x, y) -> None:
         """Record one arrival (evicts the oldest entry when full)."""
-        self.appended[tenant] += 1
-        self._buf[tenant].append(
-            (np.asarray(x, self._dtype), self._dtype.type(y)),
-        )
+        buf = self._buf.get(tenant)
+        if buf is None:
+            buf = self._buf[tenant] = deque(maxlen=self.capacity)
+        self._appended[tenant] = self._appended.get(tenant, 0) + 1
+        buf.append((np.asarray(x, self._dtype), self._dtype.type(y)))
+
+    def tenants(self) -> list[int]:
+        """Keys with any recorded history."""
+        return list(self._buf)
 
     def size(self, tenant: int) -> int:
         """Entries currently held for ``tenant`` (<= capacity)."""
-        return len(self._buf[tenant])
+        buf = self._buf.get(tenant)
+        return len(buf) if buf is not None else 0
 
     def dropped(self, tenant: int) -> int:
         """Arrivals lost to ring overflow since the last ``clear``."""
-        return self.appended[tenant] - len(self._buf[tenant])
+        return self._appended.get(tenant, 0) - self.size(tenant)
 
     def complete(self, tenant: int) -> bool:
         """True iff the log still holds the tenant's entire history, i.e.
@@ -103,7 +112,7 @@ class ReplayLog:
     def arrays(self, tenant: int) -> tuple[np.ndarray, np.ndarray]:
         """Materialize the log as ``xs (n, d)``, ``ys (n,)`` in arrival
         order (empty logs yield ``(0, 0)``/``(0,)`` shapes)."""
-        buf = self._buf[tenant]
+        buf = self._buf.get(tenant)
         if not buf:
             return (
                 np.zeros((0, 0), self._dtype),
@@ -113,12 +122,26 @@ class ReplayLog:
         ys = np.asarray([y for _, y in buf], self._dtype)
         return xs, ys
 
+    def move(self, src: int, dst: int) -> None:
+        """Re-key one tenant's history (bank-compaction hook): ``dst``
+        takes over ``src``'s buffer and overflow counter, including when
+        ``src`` has none (``dst`` is then cleared)."""
+        self.clear(dst)
+        buf = self._buf.pop(src, None)
+        if buf is not None:
+            self._buf[dst] = buf
+            self._appended[dst] = self._appended.pop(src)
+
     def clear(self, tenant: Optional[int] = None) -> None:
-        """Forget one tenant's history (or every tenant's when None)."""
-        tenants = range(len(self._buf)) if tenant is None else (tenant,)
-        for t in tenants:
-            self._buf[t].clear()
-            self.appended[t] = 0
+        """Forget one tenant's history — including the overflow counter,
+        so the tenant reads ``complete()`` again — or every tenant's when
+        None."""
+        if tenant is None:
+            self._buf.clear()
+            self._appended.clear()
+        else:
+            self._buf.pop(tenant, None)
+            self._appended.pop(tenant, None)
 
 
 class StateSnapshot(NamedTuple):
@@ -379,14 +402,86 @@ class SnapshotServer:
         self.publish()
         return replayed
 
+    def release_slot(self, slot: int) -> int:
+        """Release one bank slot *without* entering the evicted set (the
+        policy tier's eviction hook): drop its pending observations, clear
+        its arrival times, park a fresh row, publish. Unlike
+        :meth:`evict`, subsequent submits to this slot train normally —
+        the policy immediately reassigns the slot to another tenant, and
+        per-tenant history lives in the policy tier's id-keyed log, not
+        the slot-keyed one. Returns the dropped pending count."""
+        dropped = self.queue.drop_pending(slot)
+        self._arrival_times[slot].clear()
+        self.queue.state = self._evict_fn(self.queue.state, slot)
+        self._evicted.discard(slot)
+        self.publish()
+        return dropped
+
+    def reset_tenant(self, tenant: int) -> int:
+        """Reset ONE tenant to a fresh slot: drop its pending
+        observations, clear its arrival times AND its replay-log history
+        — including the ring-overflow counter, so the slot reads
+        ``log.complete()`` again instead of inheriting the previous
+        occupant's stale truncation flag — park a fresh row, and leave
+        the evicted set. Returns the dropped pending count."""
+        dropped = self.queue.drop_pending(tenant)
+        self._arrival_times[tenant].clear()
+        if self.log is not None:
+            self.log.clear(tenant)
+        self.queue.state = self._evict_fn(self.queue.state, tenant)
+        self._evicted.discard(tenant)
+        self.publish()
+        return dropped
+
+    def move_slot(self, src: int, dst: int) -> None:
+        """Transfer slot-local bookkeeping from ``src`` to ``dst`` (bank
+        compaction; the caller moves the state row itself): pending
+        backlog, arrival counters and timestamps, evicted membership, and
+        slot-keyed log history. ``src`` is left empty."""
+        self.queue.move_slot(src, dst)
+        self._arrival_times[dst] = self._arrival_times[src]
+        self._arrival_times[src] = deque()
+        if src in self._evicted:
+            self._evicted.discard(src)
+            self._evicted.add(dst)
+        else:
+            self._evicted.discard(dst)
+        if self.log is not None:
+            self.log.move(src, dst)
+
+    def adopt_resized(self, state) -> None:
+        """Adopt a grown/shrunk bank state (the policy tier's resize):
+        resize the queue's per-slot buffers and the arrival-time ledger,
+        drop lifecycle bookkeeping for truncated slots (which must be
+        empty — compact first), and publish."""
+        old = self.queue.num_tenants
+        self.queue.adopt(state)
+        new = self.queue.num_tenants
+        if new >= old:
+            self._arrival_times.extend(
+                deque() for _ in range(new - old)
+            )
+        else:
+            self._arrival_times = self._arrival_times[:new]
+            self._evicted = {s for s in self._evicted if s < new}
+            if self.log is not None:
+                for t in self.log.tenants():
+                    if t >= new:
+                        self.log.clear(t)
+        self.publish()
+
     def reset(self, state) -> None:
         """Restart both buffers on a fresh bank state (tenant-eviction /
         benchmark hook): the live queue state AND the published replica
-        drop to version 0. Pending observations must be drained first."""
+        drop to version 0, and per-tenant lifecycle bookkeeping (arrival
+        counters, replay logs with their truncation flags, the evicted
+        set) is wiped with them. Pending observations must be drained
+        first."""
         if any(self.queue.backlog()):
             raise RuntimeError("reset with pending observations; drain first")
         self.queue.state = state
         self.queue.ticks_served = 0
+        self.queue.arrivals = [0] * self.queue.num_tenants
         self._arrival_times = [deque() for _ in range(self.queue.num_tenants)]
         self._snapshot = StateSnapshot(state=state, version=0, tick=0)
         if self.log is not None:
@@ -416,13 +511,18 @@ def klms_snapshot_server(
     rebuild_mode: str = "scan",
     **kw,
 ) -> SnapshotServer:
-    """Ready-to-serve snapshot-decoupled KLMS bank server.
+    """Deprecated: use ``repro.serve.make_server(learner="klms", ...)``.
 
-    Pass ``log_capacity=`` to enable the eviction/readmission lifecycle;
-    ``rebuild_mode`` selects the replay schedule a readmission uses
-    ("scan" / "blocked" / "sequential")."""
-    queue = klms_micro_batch_queue(
-        rff, num_tenants, mu=mu, chunk=chunk, mode=mode, adaptive=adaptive
+    Thin shim preserving the historical contract (returns the bare
+    :class:`SnapshotServer`; per-tenant ``(B,)`` ``mu`` honored)."""
+    from repro.serve import api
+
+    api._deprecated(
+        "klms_snapshot_server", 'make_server(learner="klms", ...)'
+    )
+    queue = api.make_queue(
+        "klms", rff, num_tenants, chunk=chunk, mode=mode,
+        adaptive=adaptive, mu=mu,
     )
     kw.setdefault(
         "rebuild_fn",
@@ -448,18 +548,19 @@ def krls_snapshot_server(
     rebuild_mode: str = "scan",
     **kw,
 ) -> SnapshotServer:
-    """Ready-to-serve snapshot-decoupled KRLS bank server.
+    """Deprecated: use ``repro.serve.make_server(learner="krls", ...)``.
 
-    Pass ``log_capacity=`` to enable the eviction/readmission lifecycle;
-    an evicted slot parks ``P_0 = I/lam`` (per-tenant ``lam`` honored)."""
-    queue = krls_micro_batch_queue(
-        rff,
-        num_tenants,
-        lam=lam,
-        beta=beta,
-        chunk=chunk,
-        mode=mode,
-        adaptive=adaptive,
+    Thin shim preserving the historical contract (returns the bare
+    :class:`SnapshotServer`; per-tenant ``(B,)`` ``lam``/``beta``
+    honored)."""
+    from repro.serve import api
+
+    api._deprecated(
+        "krls_snapshot_server", 'make_server(learner="krls", ...)'
+    )
+    queue = api.make_queue(
+        "krls", rff, num_tenants, chunk=chunk, mode=mode,
+        adaptive=adaptive, lam=lam, beta=beta,
     )
     kw.setdefault(
         "evict_fn",

@@ -297,6 +297,42 @@ def test_server_reset_clears_lifecycle_state():
     assert srv.log.size(0) == 0 and srv.log.complete(0)
 
 
+def test_reset_tenant_clears_stale_log_truncation_flags():
+    """Regression: a per-tenant reset while the ring has overflowed must
+    clear the dropped-entry counter along with the history. Before the
+    fix, the next occupant of the slot inherited ``complete() == False``
+    from the previous tenant and a later evict/rebuild silently replayed
+    a truncated (empty) history as if it were the full stream."""
+    srv = klms_snapshot_server(_RFF, 3, mu=0.3, chunk=8, log_capacity=16)
+    obs = _obs(11, 120)
+    _drive(srv, obs)
+    assert srv.log.dropped(1) > 0 and not srv.log.complete(1)
+
+    srv.evict(1)
+    dropped = srv.reset_tenant(1)
+    assert dropped == 0  # drain()ed above, nothing pending
+    # Log state fully cleared: no history AND no stale truncation flag.
+    assert srv.log.size(1) == 0
+    assert srv.log.dropped(1) == 0
+    assert srv.log.complete(1)
+    # The slot left the evicted set and serves the parked fresh row.
+    assert 1 not in srv.evicted
+    assert float(jnp.abs(srv.snapshot.state.theta[1]).max()) == 0.0
+
+    # The slot trains normally again, identical to a fresh server fed the
+    # same post-reset stream.
+    post = [(t, x, y) for (t, x, y) in _obs(13, 80) if t == 1]
+    ctl = klms_snapshot_server(_RFF, 3, mu=0.3, chunk=8, log_capacity=16)
+    _drive(srv, post)
+    _drive(ctl, post)
+    assert bool(
+        jnp.array_equal(
+            srv.snapshot.state.theta[1], ctl.snapshot.state.theta[1]
+        )
+    )
+    assert srv.log.complete(1) == ctl.log.complete(1)
+
+
 # -- f64 (subprocess: conftest pins x64 off) --------------------------------
 
 _F64_SCRIPT = r"""
