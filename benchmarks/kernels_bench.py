@@ -8,7 +8,11 @@ import jax.numpy as jnp
 
 from repro.kernels import ops
 
-__all__ = ["bench_rff_features", "bench_rff_attention"]
+__all__ = [
+    "bench_rff_features",
+    "bench_rff_attention",
+    "bench_rff_attention_decode",
+]
 
 
 def _time(fn, iters=5):
@@ -44,3 +48,44 @@ def bench_rff_attention(s: int = 4096, dfeat: int = 64, dv: int = 64,
     fn = jax.jit(lambda: ops.rff_attention(q, k, v, mode="xla", chunk=chunk))
     dt = _time(fn)
     return dt / (4 * s) * 1e6, 4 * s / dt, {"seconds": dt}
+
+
+def bench_rff_attention_decode(bh: int = 8, t: int = 64, dh: int = 64,
+                               dfeat: int = 256, dv: int = 64):
+    """Decode from the fixed-size state: fused block vs per-token dispatch.
+
+    The prefill row above never measured decode; this one times T decode
+    ticks both ways. derived = fused-block speedup (x) over T single-token
+    launches; detail carries each path's tokens/s (the trajectory columns
+    benchmarks/decode_bench.py sweeps in depth).
+    """
+    ks = jax.random.split(jax.random.PRNGKey(0), 7)
+    q = jax.random.normal(ks[0], (bh, t, dh)) * 0.1
+    k = jax.random.normal(ks[1], (bh, t, dh)) * 0.1
+    v = jax.random.normal(ks[2], (bh, t, dv))
+    w = jax.random.normal(ks[3], (dh, dfeat)) * 0.3
+    b = jax.random.uniform(ks[4], (dfeat,), maxval=2 * jnp.pi)
+    s_state = jax.random.normal(ks[5], (bh, dfeat, dv)) * 0.1
+    z_state = jax.nn.relu(jax.random.normal(ks[6], (bh, dfeat))) + 0.5
+
+    blocked = jax.jit(lambda s, z: ops.rff_attention_decode_block(
+        s, z, q, k, v, w, b, mode="xla", block_t=t))
+    step = jax.jit(lambda s, z, q1, k1, v1: ops.rff_attention_decode_block(
+        s, z, q1, k1, v1, w, b, mode="xla", block_t=1))
+
+    def per_token():
+        s_st, z_st = s_state, z_state
+        out = None
+        for i in range(t):
+            out, s_st, z_st = step(s_st, z_st, q[:, i:i + 1], k[:, i:i + 1],
+                                   v[:, i:i + 1])
+        return out, s_st, z_st
+
+    dt_blk = _time(lambda: blocked(s_state, z_state))
+    dt_tok = _time(per_token)
+    return dt_blk / (bh * t) * 1e6, dt_tok / dt_blk, {
+        "seconds_block": dt_blk,
+        "seconds_per_token_path": dt_tok,
+        "tokens_per_s_block": bh * t / dt_blk,
+        "tokens_per_s_per_token": bh * t / dt_tok,
+    }

@@ -19,9 +19,10 @@ CI artifacts. ``--no-json`` disables writing.
 The feature-quality and serve-read-path suites keep their own record
 schemas (they predate/outgrow the CSV contract); a clean full pass
 delegates to their modules' writers so ``python -m benchmarks.run``
-regenerates ``BENCH_features.json``, ``BENCH_serve.json`` and
-``BENCH_replay.json`` too, and ``--only features`` / ``--only serve`` /
-``--only replay`` regenerates just that file.
+regenerates ``BENCH_features.json``, ``BENCH_serve.json``,
+``BENCH_replay.json`` and ``BENCH_decode.json`` too, and ``--only
+features`` / ``--only serve`` / ``--only replay`` / ``--only decode``
+regenerates just that file.
 """
 from __future__ import annotations
 
@@ -32,6 +33,7 @@ import sys
 
 from benchmarks import (
     bank_bench,
+    decode_bench,
     features_bench,
     kernels_bench,
     krls_shard_bench,
@@ -53,6 +55,7 @@ SUITE_OF = {
     "orf_vs_iid": "klms",
     "kernel_rff_features": "klms",
     "kernel_rff_attention": "klms",
+    "kernel_rff_attention_decode": "klms",
     "roofline": "klms",
     "fig2b_krls": "krls",
     "krls_bank_fused_vs_twopass": "krls",
@@ -68,6 +71,7 @@ SUITE_OF = {
 # (BENCH_chunk.json stays manual: chunk_bench must set XLA_FLAGS device
 # counts before the first jax import, which run.py has already done.)
 DELEGATED = {
+    "decode": decode_bench.main,
     "features": features_bench.main,
     "replay": replay_bench.main,
     "serve": serve_bench.main,
@@ -108,6 +112,7 @@ def main() -> None:
         "orf_vs_iid": lambda: paper.orf_vs_iid(num_seeds=8 * scale),
         "kernel_rff_features": kernels_bench.bench_rff_features,
         "kernel_rff_attention": kernels_bench.bench_rff_attention,
+        "kernel_rff_attention_decode": kernels_bench.bench_rff_attention_decode,
         "bank_fused_vs_twopass": bank_bench.bench_bank_fused_vs_twopass,
         "bank_streams": bank_bench.bench_bank_streams,
         "bank_chunked_streams": bank_bench.bench_bank_chunked_streams,

@@ -39,6 +39,48 @@ ZIPF_RECORD_KEYS = ("policy", "alpha", "ratio", "hit_rate", "write_us",
 ZIPF_MIN_ALPHAS = 3
 ZIPF_MIN_RATIOS = 2
 
+# The decode suite (benchmarks/decode_bench.py) promises the columns the
+# README "Decode path" section documents, per bench kind; the committed
+# full-shape baseline must additionally cover the sweep axes (>= 3 context
+# lengths for the flat-vs-linear story, >= 2 block sizes for the launch-
+# amortization story). Smoke artifacts keep the per-record contract but
+# may cover fewer points.
+DECODE_RECORD_KEYS = {
+    "decode_context_sweep": ("attn", "context_len", "tokens_per_s",
+                             "us_per_token"),
+    "decode_block_sweep": ("block_t", "tokens_per_s", "us_per_token",
+                           "speedup_vs_per_token"),
+    "decode_bf16_error": ("feature_kind", "rel_err_out", "rel_err_state"),
+}
+DECODE_MIN_CONTEXTS = 3
+DECODE_MIN_BLOCK_TS = 2
+
+
+def check_decode(path: str, payload: dict) -> list[str]:
+    """Decode-suite-specific validation (called for suite == "decode")."""
+    errors = []
+    records = [r for r in payload.get("records", []) if isinstance(r, dict)]
+    for i, rec in enumerate(records):
+        for key in DECODE_RECORD_KEYS.get(rec.get("bench"), ()):
+            if key not in rec:
+                errors.append(f"{path}: records[{i}] missing {key!r}")
+    if not payload.get("tiny"):
+        contexts = {r.get("context_len") for r in records
+                    if r.get("bench") == "decode_context_sweep"} - {None}
+        block_ts = {r.get("block_t") for r in records
+                    if r.get("bench") == "decode_block_sweep"} - {None}
+        if len(contexts) < DECODE_MIN_CONTEXTS:
+            errors.append(
+                f"{path}: baseline covers {len(contexts)} context lengths, "
+                f"needs >= {DECODE_MIN_CONTEXTS}"
+            )
+        if len(block_ts) < DECODE_MIN_BLOCK_TS:
+            errors.append(
+                f"{path}: baseline covers {len(block_ts)} block sizes, "
+                f"needs >= {DECODE_MIN_BLOCK_TS}"
+            )
+    return errors
+
 
 def check_zipf(path: str, payload: dict) -> list[str]:
     """Zipf-suite-specific validation (called for suite == "zipf")."""
@@ -101,6 +143,8 @@ def check_file(path: str) -> list[str]:
                 errors.append(f"{path}: records[{i}] missing 'bench'")
     if payload.get("suite") == "zipf":
         errors.extend(check_zipf(path, payload))
+    if payload.get("suite") == "decode":
+        errors.extend(check_decode(path, payload))
     return errors
 
 

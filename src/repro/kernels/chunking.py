@@ -16,6 +16,7 @@ __all__ = [
     "valid_time_mask",
     "unblock_time",
     "default_chunk_t",
+    "default_decode_block_t",
 ]
 
 # Conservative per-launch working-set budget for the chunked kernels: half
@@ -76,6 +77,42 @@ def default_chunk_t(
     w_bytes = din * dpad * 4  # the grid-invariant (d, D) tile, lane-padded
     # Per tick: one (bb, din) x tile + y/mu/mask in, pred/err out.
     stream_bytes = bb * (din + 4) * item
+    spare = vmem_budget - state_bytes - w_bytes
+    if spare < 8 * stream_bytes:
+        return 8
+    t = 1 << ((spare // stream_bytes).bit_length() - 1)  # floor pow2
+    return int(min(512, t))
+
+
+def default_decode_block_t(
+    dfeat: int,
+    dv: int,
+    head_dim: int,
+    dtype=jnp.float32,
+    vmem_budget: int = DEFAULT_VMEM_BUDGET,
+) -> int:
+    """VMEM-budget-aware default T for one fused decode-block launch.
+
+    The decode-block attention kernel (kernels/rff_attention.py) owns one
+    head per grid step: the ``(D, dv)`` S tile, the ``(D,)`` z row and the
+    grid-invariant ``(dh, D)`` W tile are resident for the whole block
+    (that residency IS the win — one state read/write per T ticks), and
+    each token streams two ``(dh,)`` q/k rows, a ``(dv,)`` v row, a
+    ``(dv,)`` output row and two ``(D,)`` feature rows. T is the largest
+    power of two whose streamed tokens fit the budget left after the
+    resident tiles, clamped to [8, 512] exactly like
+    :func:`default_chunk_t`. ``dtype`` is the *stream* dtype (bf16 halves
+    the feature-row charge under the read-path precision contract); state
+    is always charged at f32.
+    """
+    item = jnp.dtype(dtype).itemsize
+    dp = -(-dfeat // _LANES) * _LANES
+    dhp = -(-head_dim // _LANES) * _LANES
+    dvp = -(-dv // _LANES) * _LANES
+    state_bytes = dp * dvp * 4 + dp * 4  # resident S tile + z row, f32
+    w_bytes = dhp * dp * 4  # grid-invariant W tile
+    # Per token: q/k rows, v + output rows, phi_q/phi_k feature rows.
+    stream_bytes = (2 * dhp + 2 * dvp) * item + 2 * dp * item
     spare = vmem_budget - state_bytes - w_bytes
     if spare < 8 * stream_bytes:
         return 8

@@ -15,13 +15,17 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.chunking import (
     default_chunk_t,
+    default_decode_block_t,
     time_blocks,
     unblock_time,
     valid_time_mask,
 )
 from repro.kernels.rff_features import rff_features_pallas
 from repro.kernels.rff_predict import rff_bank_predict_pallas
-from repro.kernels.rff_attention import rff_attention_pallas
+from repro.kernels.rff_attention import (
+    rff_attention_decode_block_pallas,
+    rff_attention_pallas,
+)
 from repro.kernels.rff_klms_step import (
     rff_klms_bank_chunk_pallas,
     rff_klms_bank_step_pallas,
@@ -48,6 +52,7 @@ __all__ = [
     "rff_krls_chunk_elements",
     "rff_attention",
     "rff_attention_decode",
+    "rff_attention_decode_block",
     "flash_attention",
 ]
 
@@ -511,6 +516,102 @@ def rff_attention_decode(
     num = jnp.einsum("bd,bdv->bv", phi_q, s_new)
     den = jnp.einsum("bd,bd->b", phi_q, z_new) + eps
     return num / den[:, None], s_new, z_new
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "feature_kind", "mode", "block_t", "normalize", "eps", "precision",
+    ),
+)
+def rff_attention_decode_block(
+    s_state: jax.Array,
+    z_state: jax.Array,
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    s: jax.Array | None = None,
+    *,
+    feature_kind: str = "prf",
+    mode: str = "auto",
+    block_t: int | None = None,
+    normalize: bool = True,
+    eps: float = 1e-6,
+    precision: str | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Blocked decode: advance the fixed-size attention state by T tokens
+    in ceil(T / block_t) launches instead of T.
+
+    The fused featurize+tick schedule of
+    :func:`repro.kernels.rff_attention.rff_attention_decode_block_pallas`:
+    pre-projected q/k ``(BH, T, dh)`` and v ``(BH, T, dv)`` enter, the
+    feature map (``feature_kind`` "trig" — the canonical affine-trig form
+    of any as_trig family — or "prf") runs in-kernel under the read-path
+    precision contract, and the per-head ``(D, dv)``/``(D,)`` state stays
+    VMEM-resident across each block's strictly sequential ticks.
+
+    ``block_t`` bounds tokens per launch; ``None`` picks the VMEM-budget
+    default ``kernels.chunking.default_decode_block_t`` (which charges the
+    resident state + W tiles). Longer decodes scan full blocks and finish
+    with one remainder launch — no masked padding, so every launch is
+    bitwise the per-token recursion at f32.
+
+    Returns (outputs ``(BH, T, dv)`` f32, new_s, new_z) — the T=1 case is
+    exactly :func:`rff_attention_decode` plus the in-kernel feature map.
+    """
+    use_pallas, interpret = _use_pallas(mode)
+    bh, tlen, dh = q.shape
+    dv = v.shape[-1]
+    dfeat = w.shape[-1]
+    if s is None:
+        s = ref.default_decode_scale(dfeat, feature_kind)
+    if block_t is None:
+        block_t = default_decode_block_t(dfeat, dv, dh, q.dtype)
+
+    def launch(sm, zv, qc, kc, vc):
+        if not use_pallas:
+            return ref.rff_attention_decode_block_ref(
+                sm, zv, qc, kc, vc, w, b, s,
+                feature_kind=feature_kind, normalize=normalize, eps=eps,
+                precision=precision,
+            )
+        return rff_attention_decode_block_pallas(
+            sm, zv, qc, kc, vc, w, b, s,
+            feature_kind=feature_kind, normalize=normalize, eps=eps,
+            precision=precision, interpret=interpret,
+        )
+
+    s_state = s_state.astype(jnp.float32)
+    z_state = z_state.astype(jnp.float32)
+    if tlen <= block_t:
+        return launch(s_state, z_state, q, k, v)
+
+    # Full blocks under a scan, then one unpadded remainder launch: padded
+    # ticks would corrupt the state (a PRF feature of a zero token is NOT
+    # zero), so the remainder gets its own exact launch instead of a mask.
+    nfull, rem = tlen // block_t, tlen % block_t
+    cut = nfull * block_t
+
+    def body(carry, qkv):
+        sm, zv = carry
+        out, sm, zv = launch(sm, zv, *qkv)
+        return (sm, zv), out
+
+    qf = jnp.moveaxis(q[:, :cut].reshape(bh, nfull, block_t, dh), 1, 0)
+    kf = jnp.moveaxis(k[:, :cut].reshape(bh, nfull, block_t, dh), 1, 0)
+    vf = jnp.moveaxis(v[:, :cut].reshape(bh, nfull, block_t, dv), 1, 0)
+    (s_state, z_state), outs = jax.lax.scan(
+        body, (s_state, z_state), (qf, kf, vf)
+    )
+    out = jnp.moveaxis(outs, 0, 1).reshape(bh, cut, -1)
+    if rem:
+        tail, s_state, z_state = launch(
+            s_state, z_state, q[:, cut:], k[:, cut:], v[:, cut:]
+        )
+        out = jnp.concatenate([out, tail], axis=1)
+    return out, s_state, z_state
 
 
 @functools.partial(

@@ -20,8 +20,11 @@ __all__ = [
     "rff_krls_bank_chunk_ref",
     "klms_chunk_elements_ref",
     "krls_chunk_elements_ref",
+    "decode_features_ref",
+    "default_decode_scale",
     "rff_attention_ref",
     "rff_attention_state_ref",
+    "rff_attention_decode_block_ref",
     "flash_attention_ref",
 ]
 
@@ -330,6 +333,58 @@ def krls_chunk_elements_ref(xs, ys, w, b, beta, mask=None, s=None):
     return jax.vmap(per_chunk)(xs, ys, mask.astype(jnp.float32))
 
 
+def decode_features_ref(
+    x, w, b, s, feature_kind="trig", precision=None, prf_eps=1e-6
+):
+    """Attention-path feature map under the read-path precision contract.
+
+    The ONE definition of how the decode kernel featurizes a block of
+    pre-projected tokens ``x (..., dh)`` against the shared spectral matrix
+    ``w (dh, D)`` — shared by :func:`rff_attention_decode_block_ref` and the
+    Pallas decode-block kernel so they can never drift:
+
+    * ``feature_kind="trig"`` — the canonical affine-trig form
+      ``s * cos(x @ w + b)`` every ``as_trig``-canonicalizable family
+      (rff/orf/qmc/gq) lowers to; runs through :func:`mp_project` /
+      :func:`mp_trig`.
+    * ``feature_kind="prf"`` — positive random features of the softmax
+      kernel, ``s * (exp(x @ w - ||x||^2/2) / sqrt(D) + prf_eps)`` with
+      ``b`` unused (PRF has no phase). ``s`` here is a 0/1 column mask
+      (1 everywhere unpadded) so zero-padded D columns are exactly 0 —
+      exp of a padded column is NOT 0 and would poison the normalizer.
+
+    ``precision`` follows the module-level contract: bf16 GEMM operands,
+    f32 accumulation, bf16 feature storage.
+    """
+    x32 = x.astype(jnp.float32)
+    w32 = w.astype(jnp.float32)
+    s32 = s.astype(jnp.float32)
+    proj = mp_project(x32, w32, precision)
+    if feature_kind == "trig":
+        return mp_trig(proj, b.astype(jnp.float32), s32, precision)
+    if feature_kind != "prf":
+        raise ValueError(f"unknown feature_kind {feature_kind!r}")
+    d = w.shape[-1]
+    stab = proj - jnp.sum(jnp.square(x32), axis=-1, keepdims=True) / 2.0
+    phi = s32 * (jnp.exp(stab) / jnp.sqrt(jnp.float32(d)) + prf_eps)
+    if canon_precision(precision) == "bf16":
+        return phi.astype(jnp.bfloat16)
+    return phi
+
+
+def default_decode_scale(dfeat, feature_kind="trig"):
+    """Default per-feature scale row for the decode path.
+
+    Trig: the Monte-Carlo ``sqrt(2/D)`` (matching ``core.rff.rff_features``);
+    PRF: an all-ones column mask (PRF carries its ``1/sqrt(D)`` inside).
+    """
+    if feature_kind == "prf":
+        return jnp.ones((dfeat,), jnp.float32)
+    return jnp.broadcast_to(
+        jnp.sqrt(2.0 / dfeat).astype(jnp.float32), (dfeat,)
+    )
+
+
 def rff_attention_ref(phi_q, phi_k, v, normalize=True, eps=1e-6):
     """Quadratic-form causal kernel attention — oracle for rff_attention.
 
@@ -371,13 +426,90 @@ def rff_attention_state_ref(phi_q, phi_k, v, normalize=True, eps=1e-6):
             jnp.zeros((q.shape[-1],), jnp.float32),
         )
         (s_f, z_f), outs = jax.lax.scan(
-            body, init, (q.astype(jnp.float32), k.astype(jnp.float32), vv.astype(jnp.float32))
+            body,
+            init,
+            (
+                q.astype(jnp.float32),
+                k.astype(jnp.float32),
+                vv.astype(jnp.float32),
+            ),
         )
         return outs.astype(q.dtype), s_f, z_f
 
     import jax as _jax
 
     return _jax.vmap(per_head)(phi_q, phi_k, v)
+
+
+def rff_attention_decode_block_ref(
+    s_state,
+    z_state,
+    q,
+    k,
+    v,
+    w,
+    b,
+    s=None,
+    *,
+    feature_kind="prf",
+    normalize=True,
+    eps=1e-6,
+    precision=None,
+):
+    """Scan-of-tick oracle for the fused decode-block kernel.
+
+    A block of T pre-projected decode tokens advances the fixed-size
+    attention state exactly like T ``ops.rff_attention_decode`` calls:
+    the whole block featurizes in one GEMM (:func:`decode_features_ref`,
+    under the precision contract), then each token applies the
+    update-then-emit tick
+
+        S += phi_k v^T;  z += phi_k;  o = phi_q S [/ (phi_q . z + eps)]
+
+    in f32 regardless of feature storage precision (state never drops
+    precision).
+
+    Args:
+      s_state: ``(BH, D, dv)`` f32 running sum of phi(k) v^T.
+      z_state: ``(BH, D)`` f32 running sum of phi(k).
+      q, k: ``(BH, T, dh)`` pre-projected (RoPE'd, pre-scaled) tokens.
+      v: ``(BH, T, dv)`` values.
+      w: ``(dh, D)`` shared spectral matrix; b ``(D,)`` phases (trig only).
+      s: ``(D,)`` per-feature scales; None = trig ``sqrt(2/D)`` / prf ones.
+
+    Returns:
+      (outputs ``(BH, T, dv)`` f32, new_s, new_z).
+    """
+    import jax
+
+    if s is None:
+        s = default_decode_scale(w.shape[-1], feature_kind)
+    phi_q = decode_features_ref(q, w, b, s, feature_kind, precision)
+    phi_k = decode_features_ref(k, w, b, s, feature_kind, precision)
+    phi_q = phi_q.astype(jnp.float32)
+    phi_k = phi_k.astype(jnp.float32)
+    v32 = v.astype(jnp.float32)
+
+    def tick(carry, qkv):
+        s_st, z_st = carry
+        qt, kt, vt = qkv  # (BH, D), (BH, D), (BH, dv)
+        s_st = s_st + kt[:, :, None] * vt[:, None, :]
+        z_st = z_st + kt
+        num = jnp.einsum("bd,bdv->bv", qt, s_st)
+        if normalize:
+            den = jnp.sum(qt * z_st, axis=-1) + eps
+            num = num / den[:, None]
+        return (s_st, z_st), num
+
+    qt_ = jnp.swapaxes(phi_q, 0, 1)  # (T, BH, D) time-major
+    kt_ = jnp.swapaxes(phi_k, 0, 1)
+    vt_ = jnp.swapaxes(v32, 0, 1)
+    (s_f, z_f), outs = jax.lax.scan(
+        tick,
+        (s_state.astype(jnp.float32), z_state.astype(jnp.float32)),
+        (qt_, kt_, vt_),
+    )
+    return jnp.swapaxes(outs, 0, 1), s_f, z_f
 
 
 def flash_attention_ref(q, k, v, causal=True):

@@ -33,7 +33,14 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-__all__ = ["rff_attention_kernel", "rff_attention_pallas"]
+from repro.kernels.ref import canon_precision, mp_project, mp_trig
+
+__all__ = [
+    "rff_attention_kernel",
+    "rff_attention_pallas",
+    "rff_attention_decode_block_kernel",
+    "rff_attention_decode_block_pallas",
+]
 
 
 def rff_attention_kernel(
@@ -118,3 +125,215 @@ def rff_attention_pallas(
         ],
         interpret=interpret,
     )(phi_q, phi_k, v)
+
+
+# ---------------------------------------------------------------------------
+# Fused decode-block kernel: T decode ticks per launch, state VMEM-resident.
+#
+# Per-token decode (ops.rff_attention_decode) pays one XLA launch AND one
+# HBM round-trip of the whole (D, dv) state per token. This kernel is the
+# predict kernel's theta-residency trick applied to attention state: a
+# (BH, T, dh) block of PRE-PROJECTED q/k/v tokens enters, the per-head
+# S (D, dv) / z (D,) state is read into VMEM once, all T strictly
+# sequential ticks run against the resident copy, and the state is written
+# back once — T ticks cost one launch and one state read/write instead
+# of T.
+#
+# The feature map is fused too (the featurize GEMM the per-token path
+# materialized in HBM): one (T, dh) @ (dh, D) MXU GEMM per block, in
+# either the canonical affine-trig form (any as_trig family: rff/orf/
+# qmc/gq) or the positive-random-feature (softmax-kernel) form, under the
+# read-path precision contract of kernels/ref.py (bf16 GEMM operands, f32
+# accumulation, f32 state — state never drops precision).
+#
+# Grid: (BH,) — one program per head; the T ticks are a fori_loop carrying
+# (S, z) as values, so the state never leaves VMEM/registers mid-block.
+# kernels.chunking.default_decode_block_t budgets T by charging the
+# resident (D, dv) state + (dh, D) W tiles against VMEM.
+# ---------------------------------------------------------------------------
+
+
+def rff_attention_decode_block_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    w_ref,
+    b_ref,
+    sc_ref,
+    s_in_ref,
+    z_in_ref,
+    o_ref,
+    s_out_ref,
+    z_out_ref,
+    *,
+    tlen: int,
+    dfeat: int,
+    feature_kind: str,
+    normalize: bool,
+    eps: float,
+    precision,
+):
+    q = q_ref[0].astype(jnp.float32)  # (Tp, dhp)
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)  # (Tp, dvp)
+    w = w_ref[...].astype(jnp.float32)  # (dhp, Dp)
+    bias = b_ref[...].astype(jnp.float32)  # (1, Dp)
+    sc = sc_ref[...].astype(jnp.float32)  # (1, Dp); padded columns are 0
+
+    # Featurize the WHOLE block in one MXU GEMM per q/k — exactly
+    # ref.decode_features_ref, inlined so padded-D handling stays in-kernel.
+    def feat(x):
+        proj = mp_project(x, w, precision)
+        if feature_kind == "trig":
+            phi = mp_trig(proj, bias, sc, precision)
+        else:  # prf: sc is a 0/1 mask killing padded-D columns
+            stab = proj - jnp.sum(jnp.square(x), axis=-1, keepdims=True) / 2.0
+            phi = sc * (
+                jnp.exp(stab) / jnp.sqrt(jnp.float32(dfeat)) + 1e-6
+            )
+            if canon_precision(precision) == "bf16":
+                phi = phi.astype(jnp.bfloat16)
+        return phi.astype(jnp.float32)
+
+    phi_q = feat(q)  # (Tp, Dp)
+    phi_k = feat(k)
+
+    o_ref[...] = jnp.zeros_like(o_ref)
+
+    def tick(i, carry):
+        s_st, z_st = carry  # (Dp, dvp) f32, (1, Dp) f32
+        qt = jax.lax.dynamic_slice_in_dim(phi_q, i, 1, axis=0)  # (1, Dp)
+        kt = jax.lax.dynamic_slice_in_dim(phi_k, i, 1, axis=0)
+        vt = jax.lax.dynamic_slice_in_dim(v, i, 1, axis=0)  # (1, dvp)
+        # Update BEFORE emitting — the token attends to itself (the
+        # ops.rff_attention_decode contract).
+        s_st = s_st + kt.T * vt  # rank-1, same elementwise order as oracle
+        z_st = z_st + kt
+        num = jnp.dot(qt, s_st, preferred_element_type=jnp.float32)
+        if normalize:
+            den = jnp.sum(qt * z_st, axis=-1) + eps
+            num = num / den[:, None]
+        o_ref[0, pl.ds(i, 1), :] = num.astype(o_ref.dtype)
+        return s_st, z_st
+
+    s_f, z_f = jax.lax.fori_loop(
+        0,
+        tlen,
+        tick,
+        (s_in_ref[0].astype(jnp.float32), z_in_ref[...].astype(jnp.float32)),
+    )
+    s_out_ref[0] = s_f
+    z_out_ref[...] = z_f
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "feature_kind", "normalize", "eps", "precision", "interpret",
+    ),
+)
+def rff_attention_decode_block_pallas(
+    s_state: jax.Array,
+    z_state: jax.Array,
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    s: jax.Array | None = None,
+    *,
+    feature_kind: str = "prf",
+    normalize: bool = True,
+    eps: float = 1e-6,
+    precision: str | None = None,
+    interpret: bool = False,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """T decode ticks per launch with the (D, dv) state VMEM-resident.
+
+    Args:
+      s_state: ``(BH, D, dv)`` f32 running sum of phi(k) v^T.
+      z_state: ``(BH, D)`` f32 running sum of phi(k).
+      q, k: ``(BH, T, dh)`` pre-projected (RoPE'd, pre-scaled) tokens.
+      v: ``(BH, T, dv)`` values.
+      w: ``(dh, D)`` shared spectral matrix, b: ``(D,)`` phases.
+      s: ``(D,)`` per-feature scales (trig) / column mask (prf); None =
+        ``ref.default_decode_scale``.
+      feature_kind: "trig" (affine-trig canonical form) or "prf".
+      precision: None/"f32" or "bf16" per the kernels/ref.py contract.
+
+    Returns:
+      (outputs ``(BH, T, dv)`` f32, new_s ``(BH, D, dv)``, new_z
+      ``(BH, D)``).
+
+    Padding is exact: dh zero-pads (adds 0 to projections and ``||x||^2``),
+    padded D columns carry scale/mask 0 so features are exactly 0 there,
+    padded T rows are never ticked (the fori_loop stops at the real T),
+    padded dv columns are sliced off.
+    """
+    from repro.kernels.ref import default_decode_scale
+    from repro.kernels.rff_features import _ceil_to, _pad2
+
+    precision = canon_precision(precision)
+    bh, tlen, dh = q.shape
+    dv = v.shape[-1]
+    dfeat = w.shape[-1]
+    assert s_state.shape == (bh, dfeat, dv)
+    assert z_state.shape == (bh, dfeat)
+    assert w.shape == (dh, dfeat) and b.shape == (dfeat,)
+    if s is None:
+        s = default_decode_scale(dfeat, feature_kind)
+    assert s.shape == (dfeat,)
+
+    tp = _ceil_to(tlen, 8)
+    dhp, dp, dvp = _ceil_to(dh, 128), _ceil_to(dfeat, 128), _ceil_to(dv, 128)
+
+    q_p = jnp.pad(q, ((0, 0), (0, tp - tlen), (0, dhp - dh)))
+    k_p = jnp.pad(k, ((0, 0), (0, tp - tlen), (0, dhp - dh)))
+    v_p = jnp.pad(v, ((0, 0), (0, tp - tlen), (0, dvp - dv)))
+    w_p = _pad2(w, dhp, dp)
+    b_p = jnp.pad(b, (0, dp - dfeat))[None, :]  # (1, Dp)
+    s_p = jnp.pad(s, (0, dp - dfeat))[None, :]  # (1, Dp), padded scales 0
+    sm_p = jnp.pad(
+        s_state.astype(jnp.float32),
+        ((0, 0), (0, dp - dfeat), (0, dvp - dv)),
+    )
+    zv_p = jnp.pad(z_state.astype(jnp.float32), ((0, 0), (0, dp - dfeat)))
+
+    out, s_new, z_new = pl.pallas_call(
+        functools.partial(
+            rff_attention_decode_block_kernel,
+            tlen=tlen,
+            dfeat=dfeat,
+            feature_kind=feature_kind,
+            normalize=normalize,
+            eps=eps,
+            precision=precision,
+        ),
+        grid=(bh,),
+        in_specs=[
+            pl.BlockSpec((1, tp, dhp), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, tp, dhp), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, tp, dvp), lambda i: (i, 0, 0)),
+            pl.BlockSpec((dhp, dp), lambda i: (0, 0)),  # grid-invariant W
+            pl.BlockSpec((1, dp), lambda i: (0, 0)),
+            pl.BlockSpec((1, dp), lambda i: (0, 0)),
+            pl.BlockSpec((1, dp, dvp), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, dp), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tp, dvp), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, dp, dvp), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, dp), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bh, tp, dvp), jnp.float32),
+            jax.ShapeDtypeStruct((bh, dp, dvp), jnp.float32),
+            jax.ShapeDtypeStruct((bh, dp), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_p, k_p, v_p, w_p, b_p, s_p, sm_p, zv_p)
+    return (
+        out[:, :tlen, :dv],
+        s_new[:, :dfeat, :dv],
+        z_new[:, :dfeat],
+    )

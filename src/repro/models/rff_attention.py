@@ -12,26 +12,46 @@ Full-sequence form runs through the chunked Pallas kernel
 context length, which is what makes the 524k-token decode cell lowerable.
 
 Feature maps: "prf" (positive random features, unbiased softmax-kernel
-estimator — default) or "trig" (the paper's cos features, Gaussian-kernel).
-The random projections are *non-trainable* buffers derived from a fixed seed,
+estimator — default) or "trig" (affine-trig Gaussian-kernel features,
+``scale * cos(x @ omega + bias)``). The trig path stores the canonical
+:class:`repro.features.TrigFeatures` triple, so ``rff_attn_init`` accepts any
+``as_trig``-canonicalizable family (rff / orf / qmc / gq) via ``feature_map=``
+— the deterministic families hit the iid-RFF floor at 2-8x smaller D
+(BENCH_features.json) and that saving now applies to attention state too.
+The projections are *non-trainable* buffers derived from a fixed seed,
 exactly like the paper's Omega.
+
+Decode comes in two grains: ``rff_attn_decode_block`` feeds a (B, T, d) block
+of tokens to the fused Pallas decode kernel (state resident in VMEM across
+all T in-kernel ticks — one launch and one state read/write per block), and
+``rff_attn_decode`` is its T=1 case.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
+from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.rff import RFF, positive_random_features, sample_prf
+from repro.features import TrigFeatures, as_trig, trig_features, uniform_trig_scale
 from repro.kernels import ops
+from repro.models.attention import (
+    apply_head_mask,
+    head_mask,
+    head_out,
+    head_out_init,
+    head_proj,
+    head_proj_init,
+)
 from repro.models.layers import apply_rope, rope_freqs
 
 __all__ = [
     "rff_attn_init",
     "rff_attn_apply",
     "rff_attn_decode",
+    "rff_attn_decode_block",
     "RFFState",
     "rff_state_init",
 ]
@@ -44,40 +64,69 @@ class RFFState(NamedTuple):
 
 
 def rff_attn_init(
-    key: jax.Array, cfg: ModelConfig, dtype=jnp.float32
+    key: jax.Array,
+    cfg: ModelConfig,
+    dtype=jnp.float32,
+    feature_map=None,
 ) -> dict:
-    """Projections + fixed random features (per-layer Omega buffer)."""
+    """Projections + fixed feature buffers (per-layer Omega).
+
+    ``feature_map``: any ``as_trig``-canonicalizable family (a
+    :class:`repro.features.FeatureMap`, :class:`TrigFeatures` or ``RFF``)
+    replaces the default Monte-Carlo draw — this is how qmc/gq run the
+    attention path at their smaller D. It must match ``cfg``'s head dim and
+    ``rff_num_features``; the prf path reads only ``omega`` (Gaussian rows),
+    so deterministic trig families pair with ``feature_kind="trig"``.
+    """
     d, h = cfg.d_model, cfg.padded_heads
     dh = cfg.resolved_head_dim
+    dfeat = cfg.rff_num_features
     kq, kk, kv, ko, kf = jax.random.split(key, 5)
-    feat = sample_prf(kf, dh, cfg.rff_num_features, dtype=jnp.float32)
-    from repro.models.attention import head_out_init, head_proj_init
-
+    if feature_map is None:
+        feat = sample_prf(kf, dh, dfeat, dtype=jnp.float32)
+        omega, bias = feat.omega, feat.bias
+        scale = uniform_trig_scale(dfeat, jnp.float32)
+    else:
+        tf = as_trig(feature_map)
+        if tf.input_dim != dh or tf.num_features != dfeat:
+            raise ValueError(
+                f"feature_map is ({tf.input_dim}, {tf.num_features}); "
+                f"cfg wants head_dim={dh}, rff_num_features={dfeat}"
+            )
+        omega = tf.omega.astype(jnp.float32)
+        bias = tf.bias.astype(jnp.float32)
+        scale = tf.scale.astype(jnp.float32)
     return {
         "wq": head_proj_init(kq, d, h, dh, dtype=dtype),
         "wk": head_proj_init(kk, d, h, dh, dtype=dtype),
         "wv": head_proj_init(kv, d, h, dh, dtype=dtype),
         "wo": head_out_init(ko, h, dh, d, dtype=dtype),
         # non-trainable buffers (stop_gradient applied at use sites)
-        "omega": feat.omega,
-        "bias": feat.bias,
+        "omega": omega,
+        "bias": bias,
+        "scale": scale,
     }
 
 
-def _feature(p: dict, x: jax.Array, kind: str) -> jax.Array:
-    rff = RFF(
+def _trig_buffers(p: dict) -> TrigFeatures:
+    return TrigFeatures(
         omega=jax.lax.stop_gradient(p["omega"]).astype(jnp.float32),
         bias=jax.lax.stop_gradient(p["bias"]).astype(jnp.float32),
+        scale=jax.lax.stop_gradient(
+            p.get("scale", uniform_trig_scale(p["omega"].shape[1]))
+        ).astype(jnp.float32),
     )
+
+
+def _feature(p: dict, x: jax.Array, kind: str) -> jax.Array:
+    tf = _trig_buffers(p)
     x32 = x.astype(jnp.float32)
     if kind == "trig":
-        return rff_features(rff, x32)
-    return positive_random_features(rff, x32)
+        return trig_features(tf, x32)
+    return positive_random_features(RFF(omega=tf.omega, bias=tf.bias), x32)
 
 
 def _project(p, cfg: ModelConfig, x, positions):
-    from repro.models.attention import head_proj
-
     dh = cfg.resolved_head_dim
     q = head_proj(p["wq"], x)  # (B, S, H, dh)
     k = head_proj(p["wk"], x)
@@ -118,8 +167,6 @@ def rff_attn_apply(
         normalize=feature_kind == "prf",
     )
     out = out.reshape(b, h, s, dh).transpose(0, 2, 1, 3)  # (B, S, H, dh)
-    from repro.models.attention import apply_head_mask, head_mask, head_out
-
     out = apply_head_mask(out, head_mask(cfg))
     return head_out(p["wo"], out.astype(x.dtype))
 
@@ -135,6 +182,68 @@ def rff_state_init(
     )
 
 
+def rff_attn_decode_block(
+    p: dict,
+    cfg: ModelConfig,
+    x: jax.Array,
+    state: RFFState,
+    *,
+    feature_kind: str = "prf",
+    kernel_mode: str = "auto",
+    block_t: Optional[int] = None,
+    precision: Optional[str] = None,
+) -> tuple[jax.Array, RFFState]:
+    """Decode a (B, T, d) block of tokens from the fixed-size state.
+
+    The block rides the fused decode kernel: featurization is one GEMM and
+    the per-head (D, dv) S tile + (D,) z row stay VMEM-resident across all T
+    sequential in-kernel ticks — T decode steps cost one launch and one
+    state read/write instead of T. ``precision="bf16"`` runs the feature /
+    numerator GEMMs under the read-path contract (bf16 operands, f32
+    accumulation, f32 state). Cost per token is O(H D dv) regardless of how
+    many tokens came before — the LLM-serving analogue of RFFKLMS's fixed
+    theta.
+    """
+    b, t = x.shape[0], x.shape[1]
+    h, dh = cfg.padded_heads, cfg.resolved_head_dim
+    positions = jnp.full((b, t), state.pos, jnp.int32) + jnp.arange(
+        t, dtype=jnp.int32
+    )[None, :]
+    q, k, v = _project(p, cfg, x, positions)
+    scale = dh**-0.25
+    tf = _trig_buffers(p)
+    # (BH, T, ...) layout; tokens enter RAW — the kernel owns featurization.
+    qq = (q * scale).astype(jnp.float32).transpose(0, 2, 1, 3).reshape(b * h, t, dh)
+    kk = (k * scale).astype(jnp.float32).transpose(0, 2, 1, 3).reshape(b * h, t, dh)
+    vv = v.astype(jnp.float32).transpose(0, 2, 1, 3).reshape(b * h, t, dh)
+    dfeat = tf.num_features
+    s_flat = state.s.astype(jnp.float32).reshape(b * h, dfeat, dh)
+    z_flat = state.z.astype(jnp.float32).reshape(b * h, dfeat)
+    out, s_new, z_new = ops.rff_attention_decode_block(
+        s_flat,
+        z_flat,
+        qq,
+        kk,
+        vv,
+        tf.omega,
+        tf.bias,
+        tf.scale if feature_kind == "trig" else None,
+        feature_kind=feature_kind,
+        mode=kernel_mode,
+        block_t=block_t,
+        normalize=feature_kind == "prf",
+        precision=precision,
+    )
+    new_state = RFFState(
+        s=s_new.reshape(b, h, dfeat, dh).astype(state.s.dtype),
+        z=z_new.reshape(b, h, dfeat).astype(state.z.dtype),
+        pos=state.pos + t,
+    )
+    out = out.reshape(b, h, t, dh).transpose(0, 2, 1, 3).astype(x.dtype)
+    out = apply_head_mask(out, head_mask(cfg))
+    return head_out(p["wo"], out), new_state
+
+
 def rff_attn_decode(
     p: dict,
     cfg: ModelConfig,
@@ -142,35 +251,18 @@ def rff_attn_decode(
     state: RFFState,
     *,
     feature_kind: str = "prf",
+    kernel_mode: str = "auto",
+    precision: Optional[str] = None,
 ) -> tuple[jax.Array, RFFState]:
-    """One-token decode from the fixed-size state. x: (B, 1, d).
+    """One-token decode from the fixed-size state — the T=1 block case.
 
-    Cost O(H · D · dv) per token — independent of how many tokens came
-    before. This is the LLM-serving analogue of RFFKLMS's fixed theta.
-    """
-    b = x.shape[0]
-    h, dh = cfg.padded_heads, cfg.resolved_head_dim
-    positions = state.pos[None, None] + jnp.zeros((b, 1), jnp.int32)
-    q, k, v = _project(p, cfg, x, positions)
-    scale = dh**-0.25
-    phi_q = _feature(p, q * scale, feature_kind)[:, 0]  # (B, H, D)
-    phi_k = _feature(p, k * scale, feature_kind)[:, 0]
-    vv = v[:, 0].astype(jnp.float32)  # (B, H, dh)
-
-    dfeat = phi_q.shape[-1]
-    pq = phi_q.reshape(b * h, dfeat)
-    pk = phi_k.reshape(b * h, dfeat)
-    vflat = vv.reshape(b * h, dh)
-    s_flat = state.s.astype(jnp.float32).reshape(b * h, dfeat, dh)
-    z_flat = state.z.astype(jnp.float32).reshape(b * h, dfeat)
-    out, s_new, z_new = ops.rff_attention_decode(s_flat, z_flat, pq, pk, vflat)
-    new_state = RFFState(
-        s=s_new.reshape(b, h, dfeat, dh).astype(state.s.dtype),
-        z=z_new.reshape(b, h, dfeat).astype(state.z.dtype),
-        pos=state.pos + 1,
+    x: (B, 1, d)."""
+    return rff_attn_decode_block(
+        p,
+        cfg,
+        x,
+        state,
+        feature_kind=feature_kind,
+        kernel_mode=kernel_mode,
+        precision=precision,
     )
-    out = out.reshape(b, 1, h, dh).astype(x.dtype)
-    from repro.models.attention import apply_head_mask, head_mask, head_out
-
-    out = apply_head_mask(out, head_mask(cfg))
-    return head_out(p["wo"], out), new_state

@@ -1,0 +1,262 @@
+"""Fused decode-block attention: kernel vs oracle, block vs per-token,
+prefill-then-decode vs full-sequence, bf16 floor, feature-family wiring.
+
+Tolerance contract: comparisons that run through the SAME code path at both
+grains (block T vs T sequential T=1 launches) are pinned bitwise at f32 —
+every tick is sequential either way, so nothing reassociates. Kernel-vs-
+oracle comparisons cross code paths (the kernel featurizes lane-padded
+blocks; the oracle runs unpadded batched GEMMs), which shifts reduction
+order by a few ulps — those pin tight f32 allclose instead.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.features import make_feature_map
+from repro.kernels import ops, ref
+from repro.kernels.chunking import default_decode_block_t
+from repro.kernels.rff_attention import rff_attention_decode_block_pallas
+from repro.models import rff_attention as rff_mod
+from repro.models.transformer import with_rff_attention
+
+
+def _decode_inputs(key, bh, t, dh, dfeat, dv):
+    ks = jax.random.split(key, 7)
+    q = jax.random.normal(ks[0], (bh, t, dh)) * 0.1
+    k = jax.random.normal(ks[1], (bh, t, dh)) * 0.1
+    v = jax.random.normal(ks[2], (bh, t, dv))
+    w = jax.random.normal(ks[3], (dh, dfeat)) * 0.3
+    b = jax.random.uniform(ks[4], (dfeat,), maxval=2 * np.pi)
+    s_state = jax.random.normal(ks[5], (bh, dfeat, dv)) * 0.1
+    z_state = jax.nn.relu(jax.random.normal(ks[6], (bh, dfeat))) + 0.5
+    return q, k, v, w, b, s_state, z_state
+
+
+@pytest.mark.parametrize(
+    "bh,t,dh,dfeat,dv",
+    [(3, 8, 16, 32, 16), (2, 17, 5, 300, 8), (1, 1, 16, 64, 16),
+     (4, 32, 128, 128, 128)],
+)
+@pytest.mark.parametrize("feature_kind", ["prf", "trig"])
+def test_decode_block_kernel_vs_oracle(key, bh, t, dh, dfeat, dv,
+                                       feature_kind):
+    """Interpret-mode fused kernel vs the scan-of-ticks oracle at f32."""
+    q, k, v, w, b, s_state, z_state = _decode_inputs(key, bh, t, dh, dfeat, dv)
+    normalize = feature_kind == "prf"
+    got = rff_attention_decode_block_pallas(
+        s_state, z_state, q, k, v, w, b, feature_kind=feature_kind,
+        normalize=normalize, interpret=True,
+    )
+    want = ref.rff_attention_decode_block_ref(
+        s_state, z_state, q, k, v, w, b, feature_kind=feature_kind,
+        normalize=normalize,
+    )
+    for g, wv in zip(got, want):
+        np.testing.assert_allclose(
+            np.asarray(g), np.asarray(wv), atol=1e-5, rtol=1e-5
+        )
+
+
+@pytest.mark.parametrize("bh,t,dh,dfeat,dv",
+                         [(3, 8, 16, 32, 16), (4, 32, 128, 128, 128)])
+@pytest.mark.parametrize("feature_kind", ["prf", "trig"])
+def test_decode_block_bitwise_vs_sequential_pallas(key, bh, t, dh, dfeat, dv,
+                                                   feature_kind):
+    """Block of T ticks == T sequential T=1 launches, bitwise at f32: the
+    kernel runs every tick sequentially either way, so blocking must not
+    change a single bit of output or state."""
+    q, k, v, w, b, s_state, z_state = _decode_inputs(key, bh, t, dh, dfeat, dv)
+    normalize = feature_kind == "prf"
+    blk = rff_attention_decode_block_pallas(
+        s_state, z_state, q, k, v, w, b, feature_kind=feature_kind,
+        normalize=normalize, interpret=True,
+    )
+    s_st, z_st = s_state, z_state
+    outs = []
+    for i in range(t):
+        o, s_st, z_st = rff_attention_decode_block_pallas(
+            s_st, z_st, q[:, i:i + 1], k[:, i:i + 1], v[:, i:i + 1], w, b,
+            feature_kind=feature_kind, normalize=normalize, interpret=True,
+        )
+        outs.append(o)
+    seq = (jnp.concatenate(outs, axis=1), s_st, z_st)
+    for g, wv in zip(blk, seq):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(wv))
+
+
+@pytest.mark.parametrize("feature_kind", ["prf", "trig"])
+def test_decode_block_ops_vs_sequential(key, feature_kind):
+    """Block vs per-token through the ops dispatch (XLA oracle path). The
+    oracle featurizes the whole block in one batched GEMM whose M dimension
+    differs between the two grains, which can shift the reduction blocking
+    by a few ulps — so this pins ulp-tight allclose; the strict bitwise
+    contract lives on the kernel path above, where each tick's math is
+    literally identical at both grains."""
+    bh, t, dh, dfeat, dv = 2, 12, 16, 48, 8
+    q, k, v, w, b, s_state, z_state = _decode_inputs(key, bh, t, dh, dfeat, dv)
+    normalize = feature_kind == "prf"
+    blk = ops.rff_attention_decode_block(
+        s_state, z_state, q, k, v, w, b, feature_kind=feature_kind,
+        mode="xla", normalize=normalize,
+    )
+    s_st, z_st = s_state, z_state
+    outs = []
+    for i in range(t):
+        o, s_st, z_st = ops.rff_attention_decode_block(
+            s_st, z_st, q[:, i:i + 1], k[:, i:i + 1], v[:, i:i + 1], w, b,
+            feature_kind=feature_kind, mode="xla", normalize=normalize,
+        )
+        outs.append(o)
+    seq = (jnp.concatenate(outs, axis=1), s_st, z_st)
+    for g, wv in zip(blk, seq):
+        np.testing.assert_allclose(
+            np.asarray(g), np.asarray(wv), atol=1e-6, rtol=1e-6
+        )
+
+
+@pytest.mark.parametrize("block_t", [4, 8, 16])
+@pytest.mark.parametrize("mode", ["xla", "interpret"])
+def test_decode_block_sub_chunking(key, block_t, mode):
+    """tlen > block_t scans full blocks + an unpadded remainder launch; the
+    result must match one all-at-once launch (remainder ticks are real
+    launches, never masked pad rows — a PRF feature of a zero token is NOT
+    zero, so masking would corrupt state)."""
+    bh, t, dh, dfeat, dv = 2, 37, 16, 64, 8
+    q, k, v, w, b, s_state, z_state = _decode_inputs(key, bh, t, dh, dfeat, dv)
+    chunked = ops.rff_attention_decode_block(
+        s_state, z_state, q, k, v, w, b, mode=mode, block_t=block_t,
+    )
+    whole = ops.rff_attention_decode_block(
+        s_state, z_state, q, k, v, w, b, mode=mode, block_t=t,
+    )
+    for g, wv in zip(chunked, whole):
+        np.testing.assert_allclose(
+            np.asarray(g), np.asarray(wv), atol=1e-5, rtol=1e-5
+        )
+
+
+@pytest.mark.parametrize("feature_kind", ["prf", "trig"])
+def test_decode_block_bf16_floor(key, feature_kind):
+    """bf16 read-path precision stays within the contract floor (<= 2e-2
+    relative) of the f32 oracle — state is f32 either way, only the feature
+    and numerator GEMM operands drop to bf16."""
+    bh, t, dh, dfeat, dv = 3, 16, 16, 128, 16
+    q, k, v, w, b, s_state, z_state = _decode_inputs(key, bh, t, dh, dfeat, dv)
+    normalize = feature_kind == "prf"
+    f32 = ref.rff_attention_decode_block_ref(
+        s_state, z_state, q, k, v, w, b, feature_kind=feature_kind,
+        normalize=normalize,
+    )
+    bf16 = rff_attention_decode_block_pallas(
+        s_state, z_state, q, k, v, w, b, feature_kind=feature_kind,
+        normalize=normalize, precision="bf16", interpret=True,
+    )
+    for g, wv in zip(bf16, f32):
+        g, wv = np.asarray(g, np.float32), np.asarray(wv)
+        # scale-relative max error, same normalization as the prefill
+        # attention sweep — per-element ratios blow up at near-zero entries
+        err = np.max(np.abs(g - wv)) / (np.max(np.abs(wv)) + 1e-6)
+        assert err <= 2e-2
+
+
+def test_default_decode_block_t_budget():
+    """The VMEM default charges the resident (D, dv) state: growing the
+    state shrinks T, and T stays within the [8, 512] clamp."""
+    small = default_decode_block_t(128, 64, 64)
+    big = default_decode_block_t(4096, 128, 64)
+    assert 8 <= big <= small <= 512
+    # bf16 streams fit more ticks per launch than f32 ones
+    assert default_decode_block_t(256, 64, 64, jnp.bfloat16) >= \
+        default_decode_block_t(256, 64, 64, jnp.float32)
+
+
+def _rff_cfg():
+    return with_rff_attention(get_config("llama3-8b").reduced())
+
+
+@pytest.mark.parametrize("feature_kind", ["prf", "trig"])
+def test_model_decode_block_bitwise_vs_per_token(key, feature_kind):
+    """Model-level block decode == per-token decode loop, bitwise: both run
+    the same dispatch, so blocking is purely a launch-count optimization."""
+    cfg = _rff_cfg()
+    p = rff_mod.rff_attn_init(key, cfg)
+    B, T = 2, 8
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, T, cfg.d_model)) * 0.1
+    st = rff_mod.rff_state_init(cfg, B)
+    out_blk, st_blk = rff_mod.rff_attn_decode_block(
+        p, cfg, x, st, feature_kind=feature_kind
+    )
+    st_seq = rff_mod.rff_state_init(cfg, B)
+    outs = []
+    for t in range(T):
+        o, st_seq = rff_mod.rff_attn_decode(
+            p, cfg, x[:, t:t + 1], st_seq, feature_kind=feature_kind
+        )
+        outs.append(o)
+    np.testing.assert_array_equal(
+        np.asarray(out_blk), np.asarray(jnp.concatenate(outs, axis=1))
+    )
+    np.testing.assert_array_equal(np.asarray(st_blk.s), np.asarray(st_seq.s))
+    np.testing.assert_array_equal(np.asarray(st_blk.z), np.asarray(st_seq.z))
+    assert int(st_blk.pos) == int(st_seq.pos) == T
+
+
+@pytest.mark.parametrize("feature_kind", ["prf", "trig"])
+def test_model_prefill_then_decode_matches_apply(key, feature_kind):
+    """Prefill s tokens as one decode block, decode the rest per token; the
+    concatenation must match full-sequence rff_attn_apply for BOTH feature
+    kinds (the state contract that makes O(1)-in-context serving sound)."""
+    cfg = _rff_cfg()
+    p = rff_mod.rff_attn_init(key, cfg)
+    B, T, s = 2, 10, 6
+    x = jax.random.normal(jax.random.PRNGKey(2), (B, T, cfg.d_model)) * 0.1
+    full = rff_mod.rff_attn_apply(p, cfg, x, feature_kind=feature_kind)
+    st = rff_mod.rff_state_init(cfg, B)
+    pre, st = rff_mod.rff_attn_decode_block(
+        p, cfg, x[:, :s], st, feature_kind=feature_kind
+    )
+    outs = [pre]
+    for t in range(s, T):
+        o, st = rff_mod.rff_attn_decode(
+            p, cfg, x[:, t:t + 1], st, feature_kind=feature_kind
+        )
+        outs.append(o)
+    dec = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(dec), np.asarray(full), atol=1e-5, rtol=1e-5
+    )
+
+
+@pytest.mark.parametrize("family", ["qmc", "gq"])
+def test_model_decode_feature_family(key, family):
+    """Deterministic trig families plug straight into the attention decode
+    path via rff_attn_init(feature_map=...) and keep the prefill/decode
+    state contract."""
+    cfg = _rff_cfg()
+    fm = make_feature_map(
+        family, cfg.resolved_head_dim, cfg.rff_num_features, 1.0
+    )
+    p = rff_mod.rff_attn_init(key, cfg, feature_map=fm)
+    assert p["omega"].shape == (cfg.resolved_head_dim, cfg.rff_num_features)
+    assert p["scale"].shape == (cfg.rff_num_features,)
+    B, T = 2, 6
+    x = jax.random.normal(jax.random.PRNGKey(3), (B, T, cfg.d_model)) * 0.1
+    full = rff_mod.rff_attn_apply(p, cfg, x, feature_kind="trig")
+    st = rff_mod.rff_state_init(cfg, B)
+    dec, st = rff_mod.rff_attn_decode_block(
+        p, cfg, x, st, feature_kind="trig"
+    )
+    np.testing.assert_allclose(
+        np.asarray(dec), np.asarray(full), atol=1e-5, rtol=1e-5
+    )
+    assert int(st.pos) == T
+
+
+def test_model_feature_map_shape_mismatch(key):
+    cfg = _rff_cfg()
+    fm = make_feature_map("qmc", cfg.resolved_head_dim + 1,
+                          cfg.rff_num_features, 1.0)
+    with pytest.raises(ValueError, match="feature_map"):
+        rff_mod.rff_attn_init(key, cfg, feature_map=fm)

@@ -148,6 +148,36 @@ def test_state_semantics_prefill_then_decode(key):
     np.testing.assert_allclose(np.asarray(Z_new), np.asarray(Z_all), atol=1e-5)
 
 
+@pytest.mark.parametrize("bh,t,dh,D,dv", [(3, 8, 16, 32, 16), (2, 17, 5, 300, 8)])
+@pytest.mark.parametrize("feature_kind", ["prf", "trig"])
+def test_rff_decode_block_kernel_sweep(key, bh, t, dh, D, dv, feature_kind):
+    """Fused decode-block kernel (VMEM-resident S/z across T in-kernel
+    ticks) vs the scan-of-ticks oracle."""
+    from repro.kernels.rff_attention import rff_attention_decode_block_pallas
+
+    ks = jax.random.split(key, 7)
+    q = jax.random.normal(ks[0], (bh, t, dh)) * 0.1
+    k = jax.random.normal(ks[1], (bh, t, dh)) * 0.1
+    v = jax.random.normal(ks[2], (bh, t, dv))
+    w = jax.random.normal(ks[3], (dh, D)) * 0.3
+    b = jax.random.uniform(ks[4], (D,), maxval=2 * np.pi)
+    s_state = jax.random.normal(ks[5], (bh, D, dv)) * 0.1
+    z_state = jax.nn.relu(jax.random.normal(ks[6], (bh, D))) + 0.5
+    normalize = feature_kind == "prf"
+    got = rff_attention_decode_block_pallas(
+        s_state, z_state, q, k, v, w, b, feature_kind=feature_kind,
+        normalize=normalize, interpret=True,
+    )
+    want = ref.rff_attention_decode_block_ref(
+        s_state, z_state, q, k, v, w, b, feature_kind=feature_kind,
+        normalize=normalize,
+    )
+    for g, w_ in zip(got, want):
+        np.testing.assert_allclose(
+            np.asarray(g), np.asarray(w_), atol=1e-5, rtol=1e-5
+        )
+
+
 @pytest.mark.parametrize(
     "s,dh,dv,bq,bk", [(256, 64, 64, 128, 128), (256, 128, 64, 256, 64),
                       (384, 32, 32, 128, 384)]

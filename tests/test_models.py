@@ -98,6 +98,28 @@ def test_rff_decode_matches_forward(key):
                                rtol=5e-3)
 
 
+def test_rff_block_decode_matches_per_token(key):
+    """Block decode through the fused dispatch == the per-token loop at the
+    attention-layer level, bitwise — blocking only changes launch count."""
+    from repro.models import rff_attention as rff_mod
+
+    cfg = with_rff_attention(get_config("llama3-8b").reduced())
+    p = rff_mod.rff_attn_init(key, cfg)
+    x = jax.random.normal(jax.random.PRNGKey(3), (B, 8, cfg.d_model)) * 0.1
+    st_b = rff_mod.rff_state_init(cfg, B)
+    out_blk, st_b = rff_mod.rff_attn_decode_block(p, cfg, x, st_b)
+    st_s = rff_mod.rff_state_init(cfg, B)
+    outs = []
+    for t in range(8):
+        o, st_s = rff_mod.rff_attn_decode(p, cfg, x[:, t:t + 1], st_s)
+        outs.append(o)
+    np.testing.assert_array_equal(
+        np.asarray(out_blk), np.asarray(jnp.concatenate(outs, axis=1))
+    )
+    np.testing.assert_array_equal(np.asarray(st_b.s), np.asarray(st_s.s))
+    assert int(st_b.pos) == int(st_s.pos) == 8
+
+
 def test_hybrid_decode_matches_forward(key):
     cfg = get_config("recurrentgemma-2b").reduced()
     params = init_params(key, cfg)
