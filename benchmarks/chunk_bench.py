@@ -46,36 +46,23 @@ def _time(fn, iters: int = 5) -> float:
     return (time.perf_counter() - t0) / iters
 
 
+# Bytes models live in repro.obs.telemetry — the same closed forms feed the
+# live kernel.bytes_moved gauges, so the bench columns cannot drift from
+# what serving reports.
 def klms_chunk_bytes_per_tick(
     bank: int, d: int, dfeat: int, tchunk: int,
 ) -> dict:
-    """f32 HBM bytes moved per tick by the fused KLMS path at chunk T.
+    from repro.obs.telemetry import klms_chunk_bytes
 
-    Per launch: W (d*D) + b (D) fetched once, theta (B*D) read+written once,
-    plus per-tick streams x (B*d), y/mu/mask (3B) in and pred/err (2B) out.
-    """
-    per_launch = 4 * (d * dfeat + dfeat + 2 * bank * dfeat)
-    per_tick = 4 * (bank * d + 5 * bank)
-    return {
-        "bytes_per_tick_model": per_launch / tchunk + per_tick,
-        "launch_bytes": per_launch,
-        "stream_bytes_per_tick": per_tick,
-    }
+    return klms_chunk_bytes(bank, d, dfeat, tchunk)
 
 
 def krls_chunk_bytes_per_tick(
     bank: int, d: int, dfeat: int, tchunk: int,
 ) -> dict:
-    """f32 HBM bytes/tick for fused KRLS at chunk T — P dominates."""
-    per_launch = 4 * (
-        d * dfeat + dfeat + 2 * bank * dfeat + 2 * bank * dfeat * dfeat
-    )
-    per_tick = 4 * (bank * d + 5 * bank)
-    return {
-        "bytes_per_tick_model": per_launch / tchunk + per_tick,
-        "launch_bytes": per_launch,
-        "stream_bytes_per_tick": per_tick,
-    }
+    from repro.obs.telemetry import krls_chunk_bytes
+
+    return krls_chunk_bytes(bank, d, dfeat, tchunk)
 
 
 def bench_chunk_dispatch(

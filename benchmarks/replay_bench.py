@@ -141,8 +141,10 @@ def main(argv=None) -> None:
             "/tmp/BENCH_replay.json" if args.tiny else "BENCH_replay.json"
         )
 
+    # Tiny keeps the full-shape dfeat so the tlen=64 record joins exactly
+    # against the committed baseline in scripts/check_bench_regress.py.
     kw = (
-        dict(ts=(16, 64), dfeat=32, iters=2)
+        dict(ts=(16, 64), dfeat=64, iters=2)
         if args.tiny
         else dict(ts=(64, 256, 1024, 4096), dfeat=64, iters=5)
     )

@@ -60,15 +60,13 @@ def read_bytes_model(bank: int, d: int, dfeat: int, q: int) -> dict:
     query/prediction streams scale with Q. The crossover is entirely the
     amortized (d*D + B*D) term, which is why the fused path pulls away as
     the read:write ratio (and hence Q per flush interval) grows.
+
+    The closed form lives in repro.obs.telemetry — the same model feeds
+    the live kernel.bytes_moved gauge, so bench and serving cannot drift.
     """
-    shared = 4 * (d * dfeat + dfeat + bank * dfeat)  # W + b + theta
-    stream = 4 * (bank * d + bank)  # queries in, predictions out
-    return {
-        "adapter_bytes": q * (shared + stream),
-        "fused_bytes": shared + q * stream,
-        "shared_bytes_per_launch": shared,
-        "stream_bytes_per_query": stream,
-    }
+    from repro.obs.telemetry import predict_read_bytes
+
+    return predict_read_bytes(bank, d, dfeat, q)
 
 
 def bench_read_block(

@@ -71,6 +71,7 @@ def run_config(
     dfeat: int = 64,
     log_capacity: int = 64,
     seed: int = 0,
+    trace_out: str | None = None,
 ) -> dict:
     import jax
 
@@ -87,6 +88,8 @@ def run_config(
         policy=policy,
         log_capacity=log_capacity,
         size_watermark=chunk,
+        trace=trace_out is not None,
+        probe=True,
     )
     rng = np.random.default_rng(seed)
     ids = zipf_stream(rng, tenants, alpha, requests)
@@ -98,8 +101,16 @@ def run_config(
         else:
             srv.submit(int(ids[i]), xs[i], float(ys[i]))
     srv.drain()
+    # Numerics-health columns: the in-jit tap's last flush readout plus
+    # one bf16-vs-f32 read-contract sample on a Zipf-shaped query block.
+    bf16_err = srv.check_read_contract(
+        xs[: bank * 4].reshape(bank, 4, d)
+    )
+    probe = srv.probe.state()
     snap = srv.metrics.snapshot()
     lat = snap["histograms"]
+    if trace_out is not None:
+        srv.tracer.to_chrome_trace(trace_out)
 
     def pct(name):
         h = lat.get(name, {})
@@ -118,6 +129,15 @@ def run_config(
         "write_us": pct("latency.write_us"),
         "read_us": pct("latency.read_us"),
         "counters": snap["counters"],
+        "probes": {
+            "healthy": probe["healthy"],
+            "finite": probe["last"].get("finite", 1.0),
+            "theta_norm_max": round(
+                probe["last"].get("theta.norm_max", 0.0), 4
+            ),
+            "bf16_read_error": round(bf16_err, 6),
+            "degradation_events": probe["total_events"],
+        },
     }
 
 
@@ -155,6 +175,9 @@ def main(argv=None) -> int:
     parser.add_argument("--tiny", action="store_true",
                         help="CI smoke shapes (never the committed baseline)")
     parser.add_argument("--requests", type=int, default=None)
+    parser.add_argument("--trace", default=None, metavar="PATH",
+                        help="run the first recorded config traced and "
+                             "write its Chrome trace-event JSON here")
     args = parser.parse_args(argv)
 
     import jax
@@ -182,8 +205,10 @@ def main(argv=None) -> int:
     for alpha in alphas:
         for bank, tenants in ratios:
             for policy in policies:
+                trace_out = args.trace if not records else None
                 rec = run_config(
-                    policy, alpha, bank, tenants, requests=requests
+                    policy, alpha, bank, tenants, requests=requests,
+                    trace_out=trace_out,
                 )
                 records.append(rec)
                 print(

@@ -1,0 +1,310 @@
+#!/usr/bin/env python
+"""Bench-regression gate: fresh smoke run vs committed BENCH_*.json.
+
+The committed baselines at the repo root are full-shape runs; CI's
+``--tiny`` smokes re-run the same suites at small shapes into ``smoke/``.
+Where a fresh record shares its identity columns with a committed record
+(same suite, same shape keys), this gate compares the overlapping value
+columns by class:
+
+* **exact** — analytic model columns (bytes-moved, scan depth,
+  element-buffer bytes, collectives/tick). Pure functions of shape: any
+  drift means the closed form changed without regenerating baselines,
+  or bench and model went out of sync. Tight (rel 1e-6).
+* **error** — numerics floors (bf16 read-contract error, rel_err_*).
+  Fresh must stay within ``factor`` x baseline AND under an absolute
+  ceiling. Tight-ish: error floors don't move with runner load.
+* **wall** — wall-clock columns. Generous band (default 10x baseline,
+  widened further by ``--wall-slack``): CPU runners vary, but a
+  same-shape record suddenly 10x slower is a real regression.
+* **floor** — quality columns (hit rate): fresh >= baseline - slack.
+* **bounds** — absolute checks on every fresh record regardless of any
+  baseline join (probe health, degradation-event count). These keep the
+  gate non-vacuous even for suites whose tiny shapes share no identity
+  with the committed grid.
+
+Records join on the suite's identity columns; a key absent from both
+records matches (sweeps record only their own axes). Joins are strict on
+values, so tiny-shape records silently skip suites whose grids don't
+overlap — which is why ``--min-checks`` exists: if the total number of
+individual comparisons performed falls below it, the gate fails as
+vacuous instead of green-lighting nothing.
+
+Usage (CI runs exactly this)::
+
+    python scripts/check_bench_regress.py --fresh smoke --baseline . \
+        --min-checks 20
+
+``--fresh``/``--baseline`` are directories; files pair by name
+(``BENCH_x.json`` <-> ``BENCH_x.json``). Suites without a spec below are
+skipped with a note.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import math
+import os
+import sys
+
+# Per-suite comparison spec. "join" lists the identity columns (absent on
+# both sides = match); column classes are described in the module
+# docstring. Suites not listed here (run_* micro-bench suites with
+# free-form "detail" strings) are skipped.
+SPECS = {
+    "replay_bench": {
+        "join": ("bench", "family", "tlen", "d", "dfeat", "chunk"),
+        "exact": (
+            "sequential_depth", "scan_depth", "blocked_depth",
+            "sequential_element_bytes", "scan_element_bytes",
+            "blocked_element_bytes",
+        ),
+        "wall": {
+            "sequential_us_per_rebuild": 10.0,
+            "scan_us_per_rebuild": 10.0,
+            "blocked_us_per_rebuild": 10.0,
+        },
+    },
+    "chunk_bench": {
+        "join": ("bench", "schedule", "bank", "dfeat", "combine_every",
+                 "n_shards"),
+        "exact": (
+            "launch_bytes", "stream_bytes_per_tick", "bytes_per_tick_model",
+            "collectives_per_tick_model", "payload_bytes_per_collective",
+        ),
+        "wall": {"us_per_tick": 10.0},
+    },
+    "serve_bench": {
+        "join": ("bench", "family", "bank", "dfeat", "q"),
+        "exact": (
+            "adapter_bytes", "fused_bytes", "shared_bytes_per_launch",
+            "stream_bytes_per_query",
+        ),
+        "error": {
+            "max_abs_err": (8.0, 5e-2),
+            "rms_err": (8.0, 1e-2),
+        },
+        "wall": {"adapter_us": 10.0, "fused_us": 10.0},
+    },
+    "decode": {
+        "join": ("bench", "feature_kind", "attn", "context_len", "block_t"),
+        "error": {
+            "rel_err_out": (8.0, 5e-2),
+            "rel_err_state": (8.0, 5e-2),
+        },
+        "wall": {"us_per_token": 10.0},
+    },
+    "zipf": {
+        "join": ("bench", "learner", "policy", "alpha", "ratio"),
+        "wall": {"write_us.p99": 10.0, "read_us.p99": 10.0},
+        "floor": {"hit_rate": 0.05},
+        # Absolute floors on every fresh record — the numerics-health
+        # columns the obs layer added must hold at ANY shape.
+        "bounds": {
+            "probes.finite": ("min", 1.0),
+            "probes.bf16_read_error": ("max", 2e-2),
+            "probes.degradation_events": ("max", 0),
+            "hit_rate": ("min", 0.0),
+        },
+    },
+}
+
+
+def _get(rec: dict, dotted: str):
+    """Fetch a possibly-nested column ("probes.finite", "write_us.p99")."""
+    cur = rec
+    for part in dotted.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur
+
+
+def _join_key(rec: dict, keys: tuple) -> tuple:
+    return tuple(rec.get(k) for k in keys)
+
+
+def _load(path: str) -> dict | None:
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except (OSError, json.JSONDecodeError):
+        return None
+    return payload if isinstance(payload, dict) else None
+
+
+class Gate:
+    """Accumulates comparisons and failures across suite pairs."""
+
+    def __init__(self, wall_slack: float):
+        self.wall_slack = wall_slack
+        self.checks = 0
+        self.failures: list[str] = []
+
+    def _num(self, v):
+        if isinstance(v, bool):
+            return float(v)
+        return v if isinstance(v, (int, float)) else None
+
+    def compare_pair(self, name: str, fresh: dict, base: dict) -> None:
+        suite = fresh.get("suite")
+        spec = SPECS.get(suite)
+        if spec is None:
+            print(f"{name}: suite {suite!r} has no regression spec, skipped")
+            return
+        if base.get("suite") != suite:
+            self.failures.append(
+                f"{name}: fresh suite {suite!r} != baseline suite "
+                f"{base.get('suite')!r}"
+            )
+            return
+        jkeys = spec["join"]
+        base_by_key: dict[tuple, dict] = {}
+        for rec in base.get("records", []):
+            if isinstance(rec, dict):
+                base_by_key[_join_key(rec, jkeys)] = rec
+        joined = 0
+        for i, rec in enumerate(fresh.get("records", [])):
+            if not isinstance(rec, dict):
+                continue
+            where = f"{name}: records[{i}] ({rec.get('bench')})"
+            self._check_bounds(where, rec, spec.get("bounds", {}))
+            b = base_by_key.get(_join_key(rec, jkeys))
+            if b is None:
+                continue
+            joined += 1
+            self._check_exact(where, rec, b, spec.get("exact", ()))
+            self._check_error(where, rec, b, spec.get("error", {}))
+            self._check_wall(where, rec, b, spec.get("wall", {}))
+            self._check_floor(where, rec, b, spec.get("floor", {}))
+        print(f"{name}: {joined} joined records, "
+              f"{self.checks} cumulative checks")
+
+    def _check_bounds(self, where: str, rec: dict, bounds: dict) -> None:
+        for col, (kind, limit) in bounds.items():
+            v = self._num(_get(rec, col))
+            if v is None:
+                continue
+            self.checks += 1
+            if kind == "min" and v < limit:
+                self.failures.append(
+                    f"{where}: {col} = {v} below floor {limit}"
+                )
+            elif kind == "max" and v > limit:
+                self.failures.append(
+                    f"{where}: {col} = {v} above ceiling {limit}"
+                )
+
+    def _check_exact(self, where, rec, base, cols) -> None:
+        for col in cols:
+            v, b = self._num(_get(rec, col)), self._num(_get(base, col))
+            if v is None or b is None:
+                continue
+            self.checks += 1
+            if not math.isclose(v, b, rel_tol=1e-6, abs_tol=1e-9):
+                self.failures.append(
+                    f"{where}: model column {col} = {v} != baseline {b} "
+                    f"(closed form changed without regenerating baselines?)"
+                )
+
+    def _check_error(self, where, rec, base, cols) -> None:
+        for col, (factor, ceiling) in cols.items():
+            v, b = self._num(_get(rec, col)), self._num(_get(base, col))
+            if v is None or b is None:
+                continue
+            self.checks += 1
+            limit = max(b * factor, 1e-12)
+            if v > limit:
+                self.failures.append(
+                    f"{where}: {col} = {v:.3g} exceeds {factor}x baseline "
+                    f"({b:.3g})"
+                )
+            if v > ceiling:
+                self.failures.append(
+                    f"{where}: {col} = {v:.3g} above absolute ceiling "
+                    f"{ceiling}"
+                )
+
+    def _check_wall(self, where, rec, base, cols) -> None:
+        for col, factor in cols.items():
+            v, b = self._num(_get(rec, col)), self._num(_get(base, col))
+            if v is None or b is None or b <= 0:
+                continue
+            self.checks += 1
+            limit = b * factor * self.wall_slack
+            if v > limit:
+                self.failures.append(
+                    f"{where}: {col} = {v:.1f} slower than "
+                    f"{factor * self.wall_slack:g}x baseline ({b:.1f})"
+                )
+
+    def _check_floor(self, where, rec, base, cols) -> None:
+        for col, slack in cols.items():
+            v, b = self._num(_get(rec, col)), self._num(_get(base, col))
+            if v is None or b is None:
+                continue
+            self.checks += 1
+            if v < b - slack:
+                self.failures.append(
+                    f"{where}: {col} = {v:.4f} regressed below baseline "
+                    f"{b:.4f} - {slack}"
+                )
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--fresh", required=True,
+                        help="directory of fresh smoke BENCH_*.json")
+    parser.add_argument("--baseline", default=".",
+                        help="directory of committed baselines")
+    parser.add_argument("--min-checks", type=int, default=1,
+                        help="fail as vacuous below this many comparisons")
+    parser.add_argument("--wall-slack", type=float, default=1.0,
+                        help="extra multiplier on every wall-clock band")
+    args = parser.parse_args(argv)
+
+    fresh_paths = sorted(glob.glob(os.path.join(args.fresh, "BENCH_*.json")))
+    if not fresh_paths:
+        print(f"check_bench_regress: no BENCH_*.json under {args.fresh!r}",
+              file=sys.stderr)
+        return 1
+
+    gate = Gate(wall_slack=args.wall_slack)
+    for fpath in fresh_paths:
+        name = os.path.basename(fpath)
+        bpath = os.path.join(args.baseline, name)
+        fresh, base = _load(fpath), _load(bpath)
+        if fresh is None:
+            gate.failures.append(f"{name}: fresh artifact unreadable")
+            continue
+        if base is None:
+            print(f"{name}: no committed baseline, skipped")
+            continue
+        if base.get("tiny"):
+            gate.failures.append(
+                f"{name}: committed baseline is a tiny run — baselines "
+                f"must be full-shape"
+            )
+            continue
+        gate.compare_pair(name, fresh, base)
+
+    if gate.checks < args.min_checks:
+        gate.failures.append(
+            f"gate is vacuous: only {gate.checks} comparisons ran "
+            f"(--min-checks {args.min_checks}) — did the smoke grids stop "
+            f"overlapping the committed baselines?"
+        )
+    if gate.failures:
+        for f in gate.failures:
+            print(f"REGRESSION: {f}", file=sys.stderr)
+        print(f"check_bench_regress: {len(gate.failures)} failure(s) over "
+              f"{gate.checks} checks", file=sys.stderr)
+        return 1
+    print(f"check_bench_regress: OK ({gate.checks} comparisons, "
+          f"{len(fresh_paths)} suites)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

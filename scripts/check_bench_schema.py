@@ -16,12 +16,16 @@ next reads the files.
 
 Usage::
 
-    python scripts/check_bench_schema.py [FILES...]
+    python scripts/check_bench_schema.py [FILES...] [--trace TRACE.json]
 
 With no arguments, checks every ``BENCH_*.json`` at the repo root.
+``--trace`` additionally validates a Chrome trace-event export from the
+observability layer (repro/obs/trace.py): loadable, well-formed events,
+and spans present from every serve tier AND the kernel dispatch tier.
 """
 from __future__ import annotations
 
+import argparse
 import glob
 import json
 import os
@@ -31,13 +35,22 @@ SHARED_KEYS = {"suite": str, "backend": str, "records": list}
 
 # The zipf suite (benchmarks/zipf_bench.py) additionally promises the
 # policy-comparison columns the README documents: percentile latencies and
-# hit-rate per record, and (for the committed full-shape baseline) coverage
-# of >= 3 Zipf alphas and >= 2 bank:tenant ratios. Smoke artifacts keep the
-# per-record contract but may cover a single tiny config.
+# hit-rate per record, the numerics-health probe columns, and (for the
+# committed full-shape baseline) coverage of >= 3 Zipf alphas and >= 2
+# bank:tenant ratios. Smoke artifacts keep the per-record contract but may
+# cover a single tiny config.
 ZIPF_RECORD_KEYS = ("policy", "alpha", "ratio", "hit_rate", "write_us",
-                    "read_us")
+                    "read_us", "probes")
+ZIPF_PROBE_KEYS = ("healthy", "finite", "bf16_read_error")
 ZIPF_MIN_ALPHAS = 3
 ZIPF_MIN_RATIOS = 2
+
+# A traced serving run must surface every layer of the stack: the facade,
+# the micro-batch queue, the snapshot tier, and the kernel dispatch layer
+# (repro/kernels/ops.py) — a missing prefix means an instrumentation
+# regression, not a formatting nit.
+TRACE_REQUIRED_PREFIXES = ("serve.", "queue.", "snapshot.", "kernel.")
+TRACE_EVENT_KEYS = ("name", "ph", "ts", "pid", "tid")
 
 # The decode suite (benchmarks/decode_bench.py) promises the columns the
 # README "Decode path" section documents, per bench kind; the committed
@@ -98,6 +111,13 @@ def check_zipf(path: str, payload: dict) -> list[str]:
                         errors.append(
                             f"{path}: records[{i}].{col} missing {p!r}"
                         )
+        probes = rec.get("probes")
+        if isinstance(probes, dict):
+            for key in ZIPF_PROBE_KEYS:
+                if key not in probes:
+                    errors.append(
+                        f"{path}: records[{i}].probes missing {key!r}"
+                    )
     if not payload.get("tiny"):
         alphas = {r.get("alpha") for r in records} - {None}
         ratios = {r.get("ratio") for r in records} - {None}
@@ -110,6 +130,43 @@ def check_zipf(path: str, payload: dict) -> list[str]:
             errors.append(
                 f"{path}: baseline covers {len(ratios)} bank:tenant "
                 f"ratios, needs >= {ZIPF_MIN_RATIOS}"
+            )
+    return errors
+
+
+def check_trace(path: str) -> list[str]:
+    """Validate one Chrome trace-event export (empty list = OK)."""
+    errors = []
+    try:
+        with open(path) as f:
+            payload = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        return [f"{path}: unreadable ({e})"]
+    if not isinstance(payload, dict):
+        return [f"{path}: top level is {type(payload).__name__}, not object"]
+    events = payload.get("traceEvents")
+    if not isinstance(events, list) or not events:
+        return [f"{path}: 'traceEvents' missing or empty"]
+    for i, ev in enumerate(events):
+        if not isinstance(ev, dict):
+            errors.append(f"{path}: traceEvents[{i}] is not an object")
+            continue
+        for key in TRACE_EVENT_KEYS:
+            if key not in ev:
+                errors.append(f"{path}: traceEvents[{i}] missing {key!r}")
+        if ev.get("ph") == "X" and "dur" not in ev:
+            errors.append(
+                f"{path}: traceEvents[{i}] is a complete event without 'dur'"
+            )
+    names = {
+        ev.get("name", "") for ev in events if isinstance(ev, dict)
+    }
+    for prefix in TRACE_REQUIRED_PREFIXES:
+        if not any(n.startswith(prefix) for n in names):
+            errors.append(
+                f"{path}: no {prefix}* span — the "
+                f"{prefix.rstrip('.')} tier is uninstrumented or the run "
+                f"never exercised it"
             )
     return errors
 
@@ -149,13 +206,21 @@ def check_file(path: str) -> list[str]:
 
 
 def main(argv=None) -> int:
-    argv = sys.argv[1:] if argv is None else argv
-    if argv:
-        paths = argv
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("files", nargs="*",
+                        help="BENCH_*.json payloads (default: repo root)")
+    parser.add_argument("--trace", action="append", default=[],
+                        metavar="PATH",
+                        help="also validate a Chrome trace-event export")
+    args = parser.parse_args(argv)
+    if args.files:
+        paths = args.files
+    elif args.trace:
+        paths = []
     else:
         root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
         paths = sorted(glob.glob(os.path.join(root, "BENCH_*.json")))
-    if not paths:
+    if not paths and not args.trace:
         print("check_bench_schema: no BENCH_*.json files found", file=sys.stderr)
         return 1
     failures = 0
@@ -168,6 +233,15 @@ def main(argv=None) -> int:
         else:
             n = len(json.load(open(path))["records"])
             print(f"{path}: OK ({n} records)")
+    for path in args.trace:
+        errors = check_trace(path)
+        if errors:
+            failures += 1
+            for e in errors:
+                print(e, file=sys.stderr)
+        else:
+            n = len(json.load(open(path))["traceEvents"])
+            print(f"{path}: OK ({n} trace events)")
     return 1 if failures else 0
 
 

@@ -50,6 +50,7 @@ from repro.features.base import (
     featurize,
 )
 from repro.kernels import ops, ref
+from repro.obs import trace as _trace
 
 __all__ = [
     "bank_init",
@@ -767,18 +768,19 @@ def resize_bank(
         raise ValueError("bank must keep at least one slot")
     if new_size == size:
         return state
-    if new_size < size:
-        return jax.tree.map(lambda a: a[:new_size], state)
-    if fresh_row is None:
-        fresh_row = _fresh_row(state, lam)
+    with _trace.span("bank.resize", size=size, new_size=new_size):
+        if new_size < size:
+            return jax.tree.map(lambda a: a[:new_size], state)
+        if fresh_row is None:
+            fresh_row = _fresh_row(state, lam)
 
-    def grow(a, r):
-        pad = jnp.broadcast_to(
-            jnp.asarray(r, a.dtype), (new_size - size,) + a.shape[1:]
-        )
-        return jnp.concatenate([a, pad], axis=0)
+        def grow(a, r):
+            pad = jnp.broadcast_to(
+                jnp.asarray(r, a.dtype), (new_size - size,) + a.shape[1:]
+            )
+            return jnp.concatenate([a, pad], axis=0)
 
-    return jax.tree.map(grow, state, fresh_row)
+        return jax.tree.map(grow, state, fresh_row)
 
 
 def rebuild_tenant(
@@ -807,15 +809,19 @@ def rebuild_tenant(
     """
     from repro.core.scan import replay_klms, replay_krls
 
-    if hasattr(state, "pmat"):
-        row = replay_krls(
-            rff, xs, ys,
-            lam=_hp_row(lam, tenant), beta=_hp_row(beta, tenant),
-            mode=mode, chunk=chunk,
-        )
-    else:
-        row = replay_klms(
-            rff, xs, ys, _hp_row(mu, tenant),
-            mode=mode, chunk=chunk, normalized=normalized,
-        )
-    return set_tenant_row(state, tenant, row)
+    with _trace.span(
+        "bank.rebuild_tenant", tenant=tenant, ticks=int(xs.shape[0]),
+        mode=mode,
+    ):
+        if hasattr(state, "pmat"):
+            row = replay_krls(
+                rff, xs, ys,
+                lam=_hp_row(lam, tenant), beta=_hp_row(beta, tenant),
+                mode=mode, chunk=chunk,
+            )
+        else:
+            row = replay_klms(
+                rff, xs, ys, _hp_row(mu, tenant),
+                mode=mode, chunk=chunk, normalized=normalized,
+            )
+        return set_tenant_row(state, tenant, row)

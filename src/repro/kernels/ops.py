@@ -4,6 +4,18 @@ On TPU the compiled Pallas kernels run natively; on CPU (this container) the
 default is the pure-XLA reference path, with ``interpret=True`` Pallas
 execution available for kernel-correctness tests. The API is stable across
 backends so the model code never branches.
+
+Dispatch observability: the serving-path ops are host wrappers around
+their jitted cores. Each call reports to ``repro.obs.telemetry`` (live
+launch / remainder-launch counters and the bytes-moved gauge from the
+benches' closed-form models) and opens one ``kernel.<op>`` span on the
+active tracer (``repro.obs.trace``) carrying shape / dtype / mode /
+chunk attributes. Calls reached under an enclosing ``jax.jit`` trace
+execute at *trace* time, so they are tagged ``traced=True`` and counted
+under ``kernel.traces`` instead of live launches (the compiled program's
+executions are counted by the tier that invokes it, e.g. the micro-batch
+queue's per-flush dispatch record). With no active tracer the span is a
+reusable null context — the untraced path costs a few dict operations.
 """
 from __future__ import annotations
 
@@ -12,6 +24,8 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.obs import telemetry as _telemetry
+from repro.obs import trace as _trace
 from repro.kernels import ref
 from repro.kernels.chunking import (
     default_chunk_t,
@@ -80,6 +94,41 @@ def _use_pallas(mode: str) -> tuple[bool, bool]:
     raise ValueError(f"unknown kernel mode {mode!r}")
 
 
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def _dispatch(
+    op: str,
+    lead,
+    *,
+    launches: int = 1,
+    remainder: int = 0,
+    bytes_moved: float | None = None,
+    **attrs,
+):
+    """Record one dispatch-layer call for ``op`` and open its span.
+
+    ``lead`` is the op's leading array argument: a ``jax.core.Tracer``
+    there means this call site was reached under an enclosing jit trace
+    (it compiles launches, it doesn't execute them), so it is tagged
+    ``traced`` for both the telemetry counters and the span. Returns the
+    ``kernel.<op>`` span context (the shared null context when no tracer
+    is active).
+    """
+    traced = isinstance(lead, jax.core.Tracer)
+    _telemetry.record_dispatch(
+        op,
+        launches=launches,
+        remainder=remainder,
+        bytes_moved=bytes_moved,
+        traced=traced,
+    )
+    return _trace.span(
+        f"kernel.{op}", traced=traced, launches=launches, **attrs
+    )
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("mode", "block_m", "block_n", "block_k", "precision"),
@@ -119,6 +168,19 @@ def rff_features(
 @functools.partial(
     jax.jit, static_argnames=("mode", "block_b", "block_q", "precision")
 )
+def _rff_bank_predict_jit(
+    theta, xq, w, b, s=None, *, mode, block_b, block_q, precision
+):
+    use_pallas, interpret = _use_pallas(mode)
+    if not use_pallas:
+        return ref.rff_bank_predict_ref(theta, xq, w, b, s, precision)
+    return rff_bank_predict_pallas(
+        theta, xq, w, b, s,
+        block_b=block_b, block_q=block_q, precision=precision,
+        interpret=interpret,
+    )
+
+
 def rff_bank_predict(
     theta: jax.Array,
     xq: jax.Array,
@@ -141,17 +203,31 @@ def rff_bank_predict(
     is read-only and stays f32). The serving read path of serve/snapshot.py
     and benchmarks/serve_bench.py.
     """
-    use_pallas, interpret = _use_pallas(mode)
-    if not use_pallas:
-        return ref.rff_bank_predict_ref(theta, xq, w, b, s, precision)
-    return rff_bank_predict_pallas(
-        theta, xq, w, b, s,
-        block_b=block_b, block_q=block_q, precision=precision,
-        interpret=interpret,
-    )
+    bank, q, d = xq.shape
+    bm = _telemetry.predict_read_bytes(bank, d, w.shape[-1], q)
+    with _dispatch(
+        "bank_predict", theta,
+        bytes_moved=bm["fused_bytes"],
+        shape=[bank, q, d], dfeat=w.shape[-1], dtype=str(theta.dtype),
+        mode=mode, precision=precision,
+    ):
+        return _rff_bank_predict_jit(
+            theta, xq, w, b, s,
+            mode=mode, block_b=block_b, block_q=block_q, precision=precision,
+        )
 
 
 @functools.partial(jax.jit, static_argnames=("mode", "block_b"))
+def _rff_klms_bank_step_jit(theta, x, y, w, b, mu, s=None, *, mode, block_b):
+    use_pallas, interpret = _use_pallas(mode)
+    if not use_pallas:
+        return ref.rff_klms_bank_step_ref(theta, x, y, w, b, mu, s)
+    return rff_klms_bank_step_pallas(
+        theta, x, y, w, b, jnp.asarray(mu, theta.dtype), s,
+        block_b=block_b, interpret=interpret,
+    )
+
+
 def rff_klms_bank_step(
     theta: jax.Array,
     x: jax.Array,
@@ -170,41 +246,23 @@ def rff_klms_bank_step(
     (B,), s optional (D,) per-feature scales (None = sqrt(2/D)). Returns
     (theta_new, predictions, prior errors).
     """
-    use_pallas, interpret = _use_pallas(mode)
-    if not use_pallas:
-        return ref.rff_klms_bank_step_ref(theta, x, y, w, b, mu, s)
-    return rff_klms_bank_step_pallas(
-        theta, x, y, w, b, jnp.asarray(mu, theta.dtype), s,
-        block_b=block_b, interpret=interpret,
-    )
+    bank, d = x.shape
+    bm = _telemetry.klms_chunk_bytes(bank, d, theta.shape[-1], 1)
+    with _dispatch(
+        "klms_step", theta,
+        bytes_moved=bm["bytes_per_tick_model"],
+        shape=[bank, d], dfeat=theta.shape[-1], dtype=str(theta.dtype),
+        mode=mode,
+    ):
+        return _rff_klms_bank_step_jit(
+            theta, x, y, w, b, mu, s, mode=mode, block_b=block_b
+        )
 
 
 @functools.partial(jax.jit, static_argnames=("mode", "block_b", "chunk"))
-def rff_klms_bank_chunk(
-    theta: jax.Array,
-    xs: jax.Array,
-    ys: jax.Array,
-    w: jax.Array,
-    b: jax.Array,
-    mu: jax.Array | float,
-    mask: jax.Array | None = None,
-    s: jax.Array | None = None,
-    *,
-    mode: str = "auto",
-    block_b: int = 8,
-    chunk: int | None = None,
-) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """T-chunked fused KLMS: advance a bank of B filters by T ticks at once.
-
-    theta (B, D), xs (B, T, d), ys (B, T), shared w (d, D) / b (D,), mu
-    scalar or (B,), mask optional (B, T) validity gate (1 = apply update),
-    s optional (D,) per-feature scales (None = sqrt(2/D)).
-    ``chunk`` bounds the ticks per kernel launch: ``chunk=k`` scans
-    ceil(T/k) launches with a zero-masked final remainder; ``None`` picks
-    the VMEM-budget-aware ``kernels.chunking.default_chunk_t`` for (B, D)
-    (>= 512 for serving-sized banks, so short chunks still run in one
-    launch). Returns (theta_new, predictions (B, T), errors (B, T)).
-    """
+def _rff_klms_bank_chunk_jit(
+    theta, xs, ys, w, b, mu, mask=None, s=None, *, mode, block_b, chunk
+):
     use_pallas, interpret = _use_pallas(mode)
     mu_arr = jnp.asarray(mu, theta.dtype)
     bsz, tlen, _ = xs.shape
@@ -244,7 +302,63 @@ def rff_klms_bank_chunk(
     )
 
 
+def rff_klms_bank_chunk(
+    theta: jax.Array,
+    xs: jax.Array,
+    ys: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    mu: jax.Array | float,
+    mask: jax.Array | None = None,
+    s: jax.Array | None = None,
+    *,
+    mode: str = "auto",
+    block_b: int = 8,
+    chunk: int | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """T-chunked fused KLMS: advance a bank of B filters by T ticks at once.
+
+    theta (B, D), xs (B, T, d), ys (B, T), shared w (d, D) / b (D,), mu
+    scalar or (B,), mask optional (B, T) validity gate (1 = apply update),
+    s optional (D,) per-feature scales (None = sqrt(2/D)).
+    ``chunk`` bounds the ticks per kernel launch: ``chunk=k`` scans
+    ceil(T/k) launches with a zero-masked final remainder; ``None`` picks
+    the VMEM-budget-aware ``kernels.chunking.default_chunk_t`` for (B, D)
+    (>= 512 for serving-sized banks, so short chunks still run in one
+    launch). Returns (theta_new, predictions (B, T), errors (B, T)).
+    """
+    bank, tlen, d = xs.shape
+    dfeat = theta.shape[-1]
+    if chunk is None:
+        chunk = default_chunk_t(bank, dfeat, theta.dtype, input_dim=d)
+    launches = _ceil_div(tlen, chunk) if tlen > chunk else 1
+    remainder = 1 if tlen > chunk and tlen % chunk else 0
+    bm = _telemetry.klms_chunk_bytes(bank, d, dfeat, min(chunk, tlen))
+    with _dispatch(
+        "klms_chunk", theta,
+        launches=launches, remainder=remainder,
+        bytes_moved=bm["launch_bytes"] * launches
+        + bm["stream_bytes_per_tick"] * tlen,
+        shape=[bank, tlen, d], dfeat=dfeat, dtype=str(theta.dtype),
+        mode=mode, chunk=chunk,
+    ):
+        return _rff_klms_bank_chunk_jit(
+            theta, xs, ys, w, b, mu, mask, s,
+            mode=mode, block_b=block_b, chunk=chunk,
+        )
+
+
 @functools.partial(jax.jit, static_argnames=("mode",))
+def _rff_krls_bank_step_jit(theta, pmat, x, y, w, b, beta, s=None, *, mode):
+    use_pallas, interpret = _use_pallas(mode)
+    if not use_pallas:
+        return ref.rff_krls_bank_step_ref(theta, pmat, x, y, w, b, beta, s)
+    return rff_krls_bank_step_pallas(
+        theta, pmat, x, y, w, b, jnp.asarray(beta, theta.dtype), s,
+        interpret=interpret,
+    )
+
+
 def rff_krls_bank_step(
     theta: jax.Array,
     pmat: jax.Array,
@@ -263,40 +377,23 @@ def rff_krls_bank_step(
     b (D,), beta scalar or (B,), s optional (D,) per-feature scales.
     Returns (theta_new, pmat_new, predictions, prior errors).
     """
-    use_pallas, interpret = _use_pallas(mode)
-    if not use_pallas:
-        return ref.rff_krls_bank_step_ref(theta, pmat, x, y, w, b, beta, s)
-    return rff_krls_bank_step_pallas(
-        theta, pmat, x, y, w, b, jnp.asarray(beta, theta.dtype), s,
-        interpret=interpret,
-    )
+    bank, d = x.shape
+    bm = _telemetry.krls_chunk_bytes(bank, d, theta.shape[-1], 1)
+    with _dispatch(
+        "krls_step", theta,
+        bytes_moved=bm["bytes_per_tick_model"],
+        shape=[bank, d], dfeat=theta.shape[-1], dtype=str(theta.dtype),
+        mode=mode,
+    ):
+        return _rff_krls_bank_step_jit(
+            theta, pmat, x, y, w, b, beta, s, mode=mode
+        )
 
 
 @functools.partial(jax.jit, static_argnames=("mode", "chunk"))
-def rff_krls_bank_chunk(
-    theta: jax.Array,
-    pmat: jax.Array,
-    xs: jax.Array,
-    ys: jax.Array,
-    w: jax.Array,
-    b: jax.Array,
-    beta: jax.Array | float,
-    mask: jax.Array | None = None,
-    s: jax.Array | None = None,
-    *,
-    mode: str = "auto",
-    chunk: int | None = None,
-) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
-    """T-chunked fused EW-RLS: advance a bank of B tenants by T ticks at once.
-
-    theta (B, D), pmat (B, D, D), xs (B, T, d), ys (B, T), shared w (d, D) /
-    b (D,), beta scalar or (B,), mask optional (B, T) validity gate, s
-    optional (D,) per-feature scales (None = sqrt(2/D)).
-    ``chunk`` bounds ticks per launch as in :func:`rff_klms_bank_chunk`
-    (``None`` = VMEM-budget-aware default, with the ``(D, D)`` P tile
-    charged against the budget).
-    Returns (theta_new, pmat_new, predictions (B, T), errors (B, T)).
-    """
+def _rff_krls_bank_chunk_jit(
+    theta, pmat, xs, ys, w, b, beta, mask=None, s=None, *, mode, chunk
+):
     use_pallas, interpret = _use_pallas(mode)
     beta_arr = jnp.asarray(beta, theta.dtype)
     bsz, tlen, _ = xs.shape
@@ -340,9 +437,79 @@ def rff_krls_bank_chunk(
     )
 
 
+def rff_krls_bank_chunk(
+    theta: jax.Array,
+    pmat: jax.Array,
+    xs: jax.Array,
+    ys: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    beta: jax.Array | float,
+    mask: jax.Array | None = None,
+    s: jax.Array | None = None,
+    *,
+    mode: str = "auto",
+    chunk: int | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array, jax.Array]:
+    """T-chunked fused EW-RLS: advance a bank of B tenants by T ticks at once.
+
+    theta (B, D), pmat (B, D, D), xs (B, T, d), ys (B, T), shared w (d, D) /
+    b (D,), beta scalar or (B,), mask optional (B, T) validity gate, s
+    optional (D,) per-feature scales (None = sqrt(2/D)).
+    ``chunk`` bounds ticks per launch as in :func:`rff_klms_bank_chunk`
+    (``None`` = VMEM-budget-aware default, with the ``(D, D)`` P tile
+    charged against the budget).
+    Returns (theta_new, pmat_new, predictions (B, T), errors (B, T)).
+    """
+    bank, tlen, d = xs.shape
+    dfeat = theta.shape[-1]
+    if chunk is None:
+        chunk = default_chunk_t(
+            bank, dfeat, theta.dtype, pmat=True, input_dim=d
+        )
+    launches = _ceil_div(tlen, chunk) if tlen > chunk else 1
+    remainder = 1 if tlen > chunk and tlen % chunk else 0
+    bm = _telemetry.krls_chunk_bytes(bank, d, dfeat, min(chunk, tlen))
+    with _dispatch(
+        "krls_chunk", theta,
+        launches=launches, remainder=remainder,
+        bytes_moved=bm["launch_bytes"] * launches
+        + bm["stream_bytes_per_tick"] * tlen,
+        shape=[bank, tlen, d], dfeat=dfeat, dtype=str(theta.dtype),
+        mode=mode, chunk=chunk,
+    ):
+        return _rff_krls_bank_chunk_jit(
+            theta, pmat, xs, ys, w, b, beta, mask, s, mode=mode, chunk=chunk
+        )
+
+
 @functools.partial(
     jax.jit, static_argnames=("mode", "chunk", "normalized", "eps")
 )
+def _rff_klms_chunk_elements_jit(
+    xs, ys, w, b, mu, s=None, *, mode, chunk, normalized, eps
+):
+    use_pallas, interpret = _use_pallas(mode)
+    tlen = xs.shape[0]
+    dfeat = w.shape[-1]
+    if chunk is None:
+        chunk = default_chunk_t(
+            1, dfeat, xs.dtype, input_dim=xs.shape[-1], elements=True
+        )
+    chunk = min(chunk, tlen)
+    xs_c = time_blocks(xs, chunk)  # (nc, Tc, d)
+    ys_c = time_blocks(ys, chunk)
+    mask_c = valid_time_mask(tlen, chunk, jnp.float32)
+    if not use_pallas:
+        return ref.klms_chunk_elements_ref(
+            xs_c, ys_c, w, b, mu, mask_c, s, normalized=normalized, eps=eps
+        )
+    return rff_klms_chunk_elements_pallas(
+        xs_c, ys_c, w, b, mu, mask_c, s,
+        normalized=normalized, eps=eps, interpret=interpret,
+    )
+
+
 def rff_klms_chunk_elements(
     xs: jax.Array,
     ys: jax.Array,
@@ -367,6 +534,27 @@ def rff_klms_chunk_elements(
     picks the element-aware VMEM default (``default_chunk_t(...,
     elements=True)``). Returns ``(a (nc, D, D), v (nc, D))`` f32.
     """
+    tlen, d = xs.shape
+    dfeat = w.shape[-1]
+    if chunk is None:
+        chunk = default_chunk_t(1, dfeat, xs.dtype, input_dim=d,
+                                elements=True)
+    chunk = min(chunk, tlen)
+    # One grid launch covers every chunk; the tail chunk is zero-masked
+    # (composes the identity), not a separate launch.
+    with _dispatch(
+        "klms_elements", xs,
+        shape=[tlen, d], dfeat=dfeat, chunks=_ceil_div(tlen, chunk),
+        dtype=str(xs.dtype), mode=mode, chunk=chunk,
+    ):
+        return _rff_klms_chunk_elements_jit(
+            xs, ys, w, b, mu, s,
+            mode=mode, chunk=chunk, normalized=normalized, eps=eps,
+        )
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "chunk"))
+def _rff_krls_chunk_elements_jit(xs, ys, w, b, beta, s=None, *, mode, chunk):
     use_pallas, interpret = _use_pallas(mode)
     tlen = xs.shape[0]
     dfeat = w.shape[-1]
@@ -379,16 +567,12 @@ def rff_klms_chunk_elements(
     ys_c = time_blocks(ys, chunk)
     mask_c = valid_time_mask(tlen, chunk, jnp.float32)
     if not use_pallas:
-        return ref.klms_chunk_elements_ref(
-            xs_c, ys_c, w, b, mu, mask_c, s, normalized=normalized, eps=eps
-        )
-    return rff_klms_chunk_elements_pallas(
-        xs_c, ys_c, w, b, mu, mask_c, s,
-        normalized=normalized, eps=eps, interpret=interpret,
+        return ref.krls_chunk_elements_ref(xs_c, ys_c, w, b, beta, mask_c, s)
+    return rff_krls_chunk_elements_pallas(
+        xs_c, ys_c, w, b, beta, mask_c, s, interpret=interpret
     )
 
 
-@functools.partial(jax.jit, static_argnames=("mode", "chunk"))
 def rff_krls_chunk_elements(
     xs: jax.Array,
     ys: jax.Array,
@@ -407,22 +591,20 @@ def rff_krls_chunk_elements(
     ``(g, phi, r)`` with masked remainder ticks composing ``(1, 0, 0)``.
     Returns ``(g (nc,), phi (nc, D, D), r (nc, D))`` f32.
     """
-    use_pallas, interpret = _use_pallas(mode)
-    tlen = xs.shape[0]
+    tlen, d = xs.shape
     dfeat = w.shape[-1]
     if chunk is None:
-        chunk = default_chunk_t(
-            1, dfeat, xs.dtype, input_dim=xs.shape[-1], elements=True
-        )
+        chunk = default_chunk_t(1, dfeat, xs.dtype, input_dim=d,
+                                elements=True)
     chunk = min(chunk, tlen)
-    xs_c = time_blocks(xs, chunk)  # (nc, Tc, d)
-    ys_c = time_blocks(ys, chunk)
-    mask_c = valid_time_mask(tlen, chunk, jnp.float32)
-    if not use_pallas:
-        return ref.krls_chunk_elements_ref(xs_c, ys_c, w, b, beta, mask_c, s)
-    return rff_krls_chunk_elements_pallas(
-        xs_c, ys_c, w, b, beta, mask_c, s, interpret=interpret
-    )
+    with _dispatch(
+        "krls_elements", xs,
+        shape=[tlen, d], dfeat=dfeat, chunks=_ceil_div(tlen, chunk),
+        dtype=str(xs.dtype), mode=mode, chunk=chunk,
+    ):
+        return _rff_krls_chunk_elements_jit(
+            xs, ys, w, b, beta, s, mode=mode, chunk=chunk
+        )
 
 
 @functools.partial(
@@ -524,43 +706,10 @@ def rff_attention_decode(
         "feature_kind", "mode", "block_t", "normalize", "eps", "precision",
     ),
 )
-def rff_attention_decode_block(
-    s_state: jax.Array,
-    z_state: jax.Array,
-    q: jax.Array,
-    k: jax.Array,
-    v: jax.Array,
-    w: jax.Array,
-    b: jax.Array,
-    s: jax.Array | None = None,
-    *,
-    feature_kind: str = "prf",
-    mode: str = "auto",
-    block_t: int | None = None,
-    normalize: bool = True,
-    eps: float = 1e-6,
-    precision: str | None = None,
-) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """Blocked decode: advance the fixed-size attention state by T tokens
-    in ceil(T / block_t) launches instead of T.
-
-    The fused featurize+tick schedule of
-    :func:`repro.kernels.rff_attention.rff_attention_decode_block_pallas`:
-    pre-projected q/k ``(BH, T, dh)`` and v ``(BH, T, dv)`` enter, the
-    feature map (``feature_kind`` "trig" — the canonical affine-trig form
-    of any as_trig family — or "prf") runs in-kernel under the read-path
-    precision contract, and the per-head ``(D, dv)``/``(D,)`` state stays
-    VMEM-resident across each block's strictly sequential ticks.
-
-    ``block_t`` bounds tokens per launch; ``None`` picks the VMEM-budget
-    default ``kernels.chunking.default_decode_block_t`` (which charges the
-    resident state + W tiles). Longer decodes scan full blocks and finish
-    with one remainder launch — no masked padding, so every launch is
-    bitwise the per-token recursion at f32.
-
-    Returns (outputs ``(BH, T, dv)`` f32, new_s, new_z) — the T=1 case is
-    exactly :func:`rff_attention_decode` plus the in-kernel feature map.
-    """
+def _rff_attention_decode_block_jit(
+    s_state, z_state, q, k, v, w, b, s=None, *,
+    feature_kind, mode, block_t, normalize, eps, precision,
+):
     use_pallas, interpret = _use_pallas(mode)
     bh, tlen, dh = q.shape
     dv = v.shape[-1]
@@ -612,6 +761,68 @@ def rff_attention_decode_block(
         )
         out = jnp.concatenate([out, tail], axis=1)
     return out, s_state, z_state
+
+
+def rff_attention_decode_block(
+    s_state: jax.Array,
+    z_state: jax.Array,
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    w: jax.Array,
+    b: jax.Array,
+    s: jax.Array | None = None,
+    *,
+    feature_kind: str = "prf",
+    mode: str = "auto",
+    block_t: int | None = None,
+    normalize: bool = True,
+    eps: float = 1e-6,
+    precision: str | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Blocked decode: advance the fixed-size attention state by T tokens
+    in ceil(T / block_t) launches instead of T.
+
+    The fused featurize+tick schedule of
+    :func:`repro.kernels.rff_attention.rff_attention_decode_block_pallas`:
+    pre-projected q/k ``(BH, T, dh)`` and v ``(BH, T, dv)`` enter, the
+    feature map (``feature_kind`` "trig" — the canonical affine-trig form
+    of any as_trig family — or "prf") runs in-kernel under the read-path
+    precision contract, and the per-head ``(D, dv)``/``(D,)`` state stays
+    VMEM-resident across each block's strictly sequential ticks.
+
+    ``block_t`` bounds tokens per launch; ``None`` picks the VMEM-budget
+    default ``kernels.chunking.default_decode_block_t`` (which charges the
+    resident state + W tiles). Longer decodes scan full blocks and finish
+    with one remainder launch — no masked padding, so every launch is
+    bitwise the per-token recursion at f32.
+
+    Returns (outputs ``(BH, T, dv)`` f32, new_s, new_z) — the T=1 case is
+    exactly :func:`rff_attention_decode` plus the in-kernel feature map.
+    """
+    bh, tlen, dh = q.shape
+    dv = v.shape[-1]
+    dfeat = w.shape[-1]
+    if block_t is None:
+        block_t = default_decode_block_t(dfeat, dv, dh, q.dtype)
+    if tlen <= block_t:
+        launches, remainder = 1, 0
+    else:
+        nfull, rem = tlen // block_t, tlen % block_t
+        launches = nfull + (1 if rem else 0)
+        remainder = 1 if rem else 0
+    with _dispatch(
+        "decode_block", q,
+        launches=launches, remainder=remainder,
+        shape=[bh, tlen, dh], dfeat=dfeat, dtype=str(q.dtype),
+        mode=mode, block_t=block_t, feature_kind=feature_kind,
+        precision=precision,
+    ):
+        return _rff_attention_decode_block_jit(
+            s_state, z_state, q, k, v, w, b, s,
+            feature_kind=feature_kind, mode=mode, block_t=block_t,
+            normalize=normalize, eps=eps, precision=precision,
+        )
 
 
 @functools.partial(

@@ -1,0 +1,48 @@
+"""Observability layer: trace spans, dispatch telemetry, numerics probes.
+
+Three tiers, all host-side and allocation-light so the serving hot path
+stays one launch per flush:
+
+* :mod:`repro.obs.trace` — nestable wall-clock spans over a bounded ring
+  buffer, JSONL + Chrome trace-event (Perfetto) exports, and the
+  active-tracer stack the serve/kernel layers emit into.
+* :mod:`repro.obs.telemetry` — process-wide kernel-dispatch counters and
+  bytes-moved gauges (the benches' closed-form models, live).
+* :mod:`repro.obs.probes` — in-jit numerics health taps (finiteness,
+  norms, KRLS P-matrix drift), the bf16 read-contract probe, and the
+  threshold monitor that raises structured degradation events.
+
+Wired through ``repro.serve.make_server(trace=..., probe=...)`` and
+exported by ``Server.observability()``; see README "Observability".
+"""
+from repro.obs.trace import (
+    Span,
+    Tracer,
+    activate,
+    current_tracer,
+    instant,
+    span,
+)
+from repro.obs.probes import (
+    DEFAULT_THRESHOLDS,
+    DegradationEvent,
+    ProbeMonitor,
+    bf16_read_error,
+    stats_tap,
+)
+from repro.obs import telemetry
+
+__all__ = [
+    "Span",
+    "Tracer",
+    "activate",
+    "current_tracer",
+    "instant",
+    "span",
+    "DEFAULT_THRESHOLDS",
+    "DegradationEvent",
+    "ProbeMonitor",
+    "bf16_read_error",
+    "stats_tap",
+    "telemetry",
+]

@@ -1,0 +1,265 @@
+"""In-jit numerics health probes and the host-side degradation monitor.
+
+An online kernel filter that silently went non-finite (or whose KRLS P
+matrix drifted off symmetric-positive) keeps serving garbage at full
+throughput — counters and latency histograms never notice. These probes
+make state health observable without breaking the serving hot path's
+one-launch contract:
+
+* :func:`stats_tap` — ONE fused reduction pass over the float leaves of a
+  state pytree, built to run *inside* the existing jitted step/flush
+  programs (the micro-batch queue composes it after its chunk step, so
+  flush stays a single XLA program; see
+  ``MicroBatchQueue.attach_probe``). It computes finiteness, max-abs and
+  norm statistics plus the KRLS-specific P-matrix asymmetry and
+  conditioning proxies, and returns a flat ``{name: 0-d array}`` dict
+  that is only materialized host-side at flush boundaries.
+* :func:`bf16_read_error` — the read-contract probe: relative error of
+  the bf16 read path vs the f32 contract on a sampled query block
+  (host-side, on demand — it runs two small predict launches).
+* :class:`ProbeMonitor` — host-side thresholds over the tap's numbers
+  (plus snapshot staleness in ticks). Breaches raise structured
+  :class:`DegradationEvent` records, emit ``probe.degraded`` instant
+  events into the active trace (repro/obs/trace.py) and increment a
+  labeled ``probe.degraded{probe=...}`` counter — the hook the
+  non-stationary ARFF direction's drift detection plugs into.
+
+The tap only *reads* state leaves that the step program already produced,
+so attaching it must not perturb training numerics — pinned by the
+traced-vs-untraced bitwise equivalence test in tests/test_obs.py.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.obs import trace as obtrace
+
+__all__ = [
+    "DEFAULT_THRESHOLDS",
+    "DegradationEvent",
+    "ProbeMonitor",
+    "bf16_read_error",
+    "stats_tap",
+]
+
+_TINY = 1e-30
+
+
+def _path_name(path) -> str:
+    parts = []
+    for p in path:
+        name = getattr(p, "name", None)
+        if name is None:
+            name = getattr(p, "key", None)
+        if name is None:
+            name = getattr(p, "idx", None)
+        parts.append(str(name))
+    return ".".join(parts) if parts else "leaf"
+
+
+def stats_tap(state) -> dict[str, jax.Array]:
+    """Fused numerics reduction over a (bank) state pytree — jit-safe.
+
+    Returns a flat dict of 0-d arrays:
+
+    * ``finite`` — 1.0 iff every float leaf is entirely finite;
+    * ``<leaf>.max_abs`` — per float leaf;
+    * ``theta.norm_max`` — largest per-row L2 norm of a ``theta`` leaf
+      (rows = bank slots; the theta-growth probe);
+    * ``pmat.asym_rel`` — ``max|P - P^T| / max|P|`` over the bank (an
+      exactly-maintained RLS downdate keeps this at rounding level);
+    * ``pmat.diag_min`` / ``pmat.diag_max`` / ``pmat.cond_proxy`` — the
+      diagonal spread of P as a cheap conditioning-drift proxy (the true
+      condition number needs an SVD; the diagonal ratio flags the same
+      blowups for orders-of-magnitude monitoring).
+
+    Integer leaves (step counters) are skipped. All outputs are f32.
+    """
+    leaves = jax.tree_util.tree_flatten_with_path(state)[0]
+    stats: dict[str, jax.Array] = {}
+    finite = jnp.asarray(True)
+    for path, leaf in leaves:
+        if not jnp.issubdtype(leaf.dtype, jnp.floating):
+            continue
+        name = _path_name(path)
+        leaf32 = leaf.astype(jnp.float32)
+        finite = jnp.logical_and(finite, jnp.all(jnp.isfinite(leaf)))
+        stats[f"{name}.max_abs"] = jnp.max(jnp.abs(leaf32))
+        if name.endswith("theta") and leaf.ndim >= 1:
+            norms = jnp.sqrt(jnp.sum(leaf32 * leaf32, axis=-1))
+            stats["theta.norm_max"] = jnp.max(norms)
+        if name.endswith("pmat") and leaf.ndim >= 2:
+            asym = jnp.max(
+                jnp.abs(leaf32 - jnp.swapaxes(leaf32, -1, -2))
+            )
+            scale = jnp.max(jnp.abs(leaf32))
+            stats["pmat.asym_rel"] = asym / (scale + _TINY)
+            diag = jnp.abs(
+                jnp.diagonal(leaf32, axis1=-2, axis2=-1)
+            )
+            dmin, dmax = jnp.min(diag), jnp.max(diag)
+            stats["pmat.diag_min"] = dmin
+            stats["pmat.diag_max"] = dmax
+            stats["pmat.cond_proxy"] = dmax / (dmin + _TINY)
+    stats["finite"] = finite.astype(jnp.float32)
+    return stats
+
+
+def bf16_read_error(
+    state,
+    feature_map,
+    xq,
+    *,
+    mode: str = "auto",
+) -> float:
+    """Max relative error of the bf16 read contract vs the f32 contract on
+    one ``(B, Q, d)`` query block (host-side; two predict launches)."""
+    from repro.core.bank import bank_predict_block
+
+    f32 = bank_predict_block(state, xq, feature_map, mode=mode,
+                             precision=None)
+    bf16 = bank_predict_block(state, xq, feature_map, mode=mode,
+                              precision="bf16")
+    f32 = jnp.asarray(f32, jnp.float32)
+    bf16 = jnp.asarray(bf16, jnp.float32)
+    denom = jnp.max(jnp.abs(f32)) + 1e-6
+    return float(jnp.max(jnp.abs(bf16 - f32)) / denom)
+
+
+@dataclass(frozen=True)
+class DegradationEvent:
+    """One threshold breach, structured for the trace and the export."""
+
+    probe: str
+    value: float
+    threshold: float
+    direction: str  # "above" | "below"
+    tick: Optional[int] = None
+
+    def to_dict(self) -> dict:
+        return {
+            "probe": self.probe,
+            "value": self.value,
+            "threshold": self.threshold,
+            "direction": self.direction,
+            "tick": self.tick,
+        }
+
+
+# probe -> ("max" breaches above, "min" breaches below), threshold value.
+DEFAULT_THRESHOLDS: dict[str, tuple[str, float]] = {
+    "finite": ("min", 1.0),
+    "theta.norm_max": ("max", 1e6),
+    "pmat.asym_rel": ("max", 1e-2),
+    "pmat.cond_proxy": ("max", 1e12),
+    "staleness_ticks": ("max", float("inf")),
+    "bf16_read_error": ("max", 2e-2),
+}
+
+
+class ProbeMonitor:
+    """Threshold monitor over :func:`stats_tap` outputs.
+
+    Args:
+      thresholds: overrides merged over :data:`DEFAULT_THRESHOLDS` —
+        either ``{"name": value}`` (direction from the default table,
+        "max" for unknown names) or ``{"name": ("min"|"max", value)}``.
+      registry: optional :class:`~repro.serve.metrics.MetricsRegistry`
+        receiving the ``probe.degraded{probe=...}`` counters.
+      max_events: degradation events retained (older ones drop; the
+        total count is kept).
+    """
+
+    def __init__(
+        self,
+        thresholds: Optional[dict] = None,
+        registry=None,
+        max_events: int = 64,
+    ):
+        merged: dict[str, tuple[str, float]] = dict(DEFAULT_THRESHOLDS)
+        for name, spec in (thresholds or {}).items():
+            if isinstance(spec, tuple):
+                direction, value = spec
+            else:
+                direction = DEFAULT_THRESHOLDS.get(name, ("max", 0.0))[0]
+                value = spec
+            merged[name] = (direction, float(value))
+        self.thresholds = merged
+        self.registry = registry
+        self.max_events = max_events
+        self.events: list[DegradationEvent] = []
+        self.total_events = 0
+        self.last_stats: dict[str, float] = {}
+        self.last_tick: Optional[int] = None
+        self.updates = 0
+
+    def _fire(self, ev: DegradationEvent) -> None:
+        self.total_events += 1
+        self.events.append(ev)
+        if len(self.events) > self.max_events:
+            self.events.pop(0)
+        obtrace.instant("probe.degraded", **ev.to_dict())
+        if self.registry is not None:
+            self.registry.counter("probe.degraded", probe=ev.probe).inc()
+
+    def update(
+        self,
+        stats: dict[str, Any],
+        *,
+        tick: Optional[int] = None,
+        staleness: Optional[int] = None,
+        bf16_err: Optional[float] = None,
+    ) -> list[DegradationEvent]:
+        """Fold one tap readout (plus optional host-side probes) in;
+        returns the degradation events it raised."""
+        flat = {k: float(v) for k, v in stats.items()}
+        if staleness is not None:
+            flat["staleness_ticks"] = float(staleness)
+        if bf16_err is not None:
+            flat["bf16_read_error"] = float(bf16_err)
+        self.last_stats = flat
+        self.last_tick = tick
+        self.updates += 1
+        fired = []
+        for name, value in flat.items():
+            spec = self.thresholds.get(name)
+            if spec is None:
+                continue
+            direction, bound = spec
+            breached = value > bound if direction == "max" else value < bound
+            if breached:
+                ev = DegradationEvent(
+                    probe=name,
+                    value=value,
+                    threshold=bound,
+                    direction="above" if direction == "max" else "below",
+                    tick=tick,
+                )
+                self._fire(ev)
+                fired.append(ev)
+        return fired
+
+    def healthy(self) -> bool:
+        """True iff no degradation event has ever fired."""
+        return self.total_events == 0
+
+    def state(self) -> dict:
+        """JSON-able export for ``Server.observability()`` and the Zipf
+        bench's numerics-health columns."""
+        return {
+            "last": dict(self.last_stats),
+            "last_tick": self.last_tick,
+            "updates": self.updates,
+            "healthy": self.healthy(),
+            "total_events": self.total_events,
+            "events": [ev.to_dict() for ev in self.events],
+            "thresholds": {
+                k: {"direction": d, "value": v}
+                for k, (d, v) in sorted(self.thresholds.items())
+                if v != float("inf")
+            },
+        }

@@ -1,0 +1,138 @@
+"""Live dispatch telemetry: launch counters and bytes-moved gauges.
+
+The benches (benchmarks/chunk_bench.py, benchmarks/serve_bench.py) compute
+HBM bytes-moved models offline to explain their wall clocks; serving has
+had no live view of the same numbers. This module is the process-wide
+registry the kernel dispatch layer (kernels/ops.py) and the serve tier
+report into:
+
+* ``kernel.launches{op=...}`` / ``kernel.remainder_launches{op=...}`` —
+  live counters of kernel launches dispatched from the host, including
+  the sub-chunk scan structure (a (B, T) chunk call at kernel chunk k is
+  ceil(T/k) launches, the last one masked/remainder);
+* ``kernel.traces{op=...}`` — dispatch sites reached under an enclosing
+  ``jax.jit`` trace. Those calls execute at *trace* time (once per
+  compiled shape), so they are counted separately from live launches —
+  the compiled program's launches surface at the tier that invokes it
+  (e.g. ``dispatch.launches{site=queue.flush}`` per micro-batch flush);
+* ``kernel.bytes_moved{op=...}`` — gauge: the bytes-moved model of the
+  most recent dispatch, from the same closed forms the benches commit
+  (re-exported here so benches and live telemetry cannot drift apart).
+
+Everything lands in one :class:`~repro.serve.metrics.MetricsRegistry`
+(labeled metrics), exported by :func:`snapshot` and embedded by
+``Server.observability()``. ``reset()`` re-zeros the registry (benches,
+tests). Imports of the registry class are deferred so ``repro.obs`` and
+``repro.serve`` can instrument each other without an import cycle.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+__all__ = [
+    "registry",
+    "reset",
+    "snapshot",
+    "record_dispatch",
+    "klms_chunk_bytes",
+    "krls_chunk_bytes",
+    "predict_read_bytes",
+]
+
+_REG = None
+
+
+def registry():
+    """The process-wide dispatch-telemetry registry (lazily created)."""
+    global _REG
+    if _REG is None:
+        from repro.serve.metrics import MetricsRegistry
+
+        _REG = MetricsRegistry()
+    return _REG
+
+
+def reset() -> None:
+    """Drop all dispatch telemetry (test / bench isolation hook)."""
+    global _REG
+    _REG = None
+
+
+def snapshot() -> dict:
+    """Plain-dict export of the dispatch registry."""
+    return registry().snapshot()
+
+
+def record_dispatch(
+    op: str,
+    *,
+    launches: int = 1,
+    remainder: int = 0,
+    bytes_moved: Optional[float] = None,
+    traced: bool = False,
+) -> None:
+    """Record one dispatch-layer call for ``op``.
+
+    ``traced=True`` means the call happened under an enclosing jit trace
+    (it compiles a launch, it does not execute one) — counted under
+    ``kernel.traces`` instead of ``kernel.launches``.
+    """
+    reg = registry()
+    if traced:
+        reg.counter("kernel.traces", op=op).inc()
+    else:
+        reg.counter("kernel.launches", op=op).inc(launches)
+        if remainder:
+            reg.counter("kernel.remainder_launches", op=op).inc(remainder)
+    if bytes_moved is not None:
+        reg.set_gauge("kernel.bytes_moved", float(bytes_moved), op=op)
+
+
+# ---------------------------------------------------------------------------
+# Bytes-moved closed forms — the single source the benches and the live
+# gauges share (benchmarks/chunk_bench.py, benchmarks/serve_bench.py).
+# ---------------------------------------------------------------------------
+
+
+def klms_chunk_bytes(bank: int, d: int, dfeat: int, tchunk: int) -> dict:
+    """f32 HBM bytes moved per tick by the fused KLMS path at chunk T.
+
+    Per launch: W (d*D) + b (D) fetched once, theta (B*D) read+written
+    once, plus per-tick streams x (B*d), y/mu/mask (3B) in and pred/err
+    (2B) out.
+    """
+    per_launch = 4 * (d * dfeat + dfeat + 2 * bank * dfeat)
+    per_tick = 4 * (bank * d + 5 * bank)
+    return {
+        "bytes_per_tick_model": per_launch / tchunk + per_tick,
+        "launch_bytes": per_launch,
+        "stream_bytes_per_tick": per_tick,
+    }
+
+
+def krls_chunk_bytes(bank: int, d: int, dfeat: int, tchunk: int) -> dict:
+    """f32 HBM bytes/tick for fused KRLS at chunk T — P dominates."""
+    per_launch = 4 * (
+        d * dfeat + dfeat + 2 * bank * dfeat + 2 * bank * dfeat * dfeat
+    )
+    per_tick = 4 * (bank * d + 5 * bank)
+    return {
+        "bytes_per_tick_model": per_launch / tchunk + per_tick,
+        "launch_bytes": per_launch,
+        "stream_bytes_per_tick": per_tick,
+    }
+
+
+def predict_read_bytes(bank: int, d: int, dfeat: int, q: int) -> dict:
+    """f32 HBM bytes for Q queries/tenant on the fused read path vs the
+    per-query adapter: shared operands (W, b, theta) amortize over the
+    whole launch in the fused kernel but are re-fetched per query by the
+    adapter."""
+    shared = 4 * (d * dfeat + dfeat + bank * dfeat)
+    stream = 4 * (bank * d + bank)
+    return {
+        "adapter_bytes": q * (shared + stream),
+        "fused_bytes": shared + q * stream,
+        "shared_bytes_per_launch": shared,
+        "stream_bytes_per_query": stream,
+    }

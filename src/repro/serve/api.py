@@ -76,6 +76,9 @@ from repro.core.learner import (
 )
 from repro.features.base import FeatureLike
 from repro.features.base import input_dim as fm_input_dim
+from repro.obs import probes as _probes
+from repro.obs import telemetry as _telemetry
+from repro.obs import trace as _obtrace
 from repro.serve.metrics import MetricsRegistry
 from repro.serve.policy import SlotPolicy
 from repro.serve.queue import MicroBatchQueue
@@ -447,6 +450,16 @@ class Server:
     ``readmissions`` / ``admission.rejects`` / ``read.cold`` /
     ``resizes``, gauge ``queue.backlog``, histograms ``latency.write_us``
     / ``latency.read_us``.
+
+    Observability (``make_server(trace=..., probe=...)``): a Tracer
+    records nested ``serve.*`` / ``queue.*`` / ``snapshot.*`` /
+    ``kernel.*`` spans for every request (it is *activated* around each
+    public method, so the deeper tiers' spans land on it without API
+    threading); a :class:`~repro.obs.probes.ProbeMonitor` rides the
+    queue's fused in-jit numerics tap and raises degradation events.
+    :meth:`observability` exports metrics + dispatch telemetry + probe
+    state + trace summary as one plain dict (schema in README
+    "Observability").
     """
 
     def __init__(
@@ -462,6 +475,8 @@ class Server:
         log_capacity: Optional[int] = None,
         auto_resize: bool = False,
         latency_clock: Callable[[], float] = time.perf_counter,
+        tracer: Optional[_obtrace.Tracer] = None,
+        probe: Union[bool, dict, None] = None,
     ):
         self._inner = inner
         self.learner = learner
@@ -473,6 +488,15 @@ class Server:
         self.auto_resize = auto_resize
         self._lat = latency_clock
         self._theta_family = learner in _THETA_FAMILIES
+        self.tracer = tracer
+        if probe:
+            self.probe = _probes.ProbeMonitor(
+                probe if isinstance(probe, dict) else None,
+                registry=self.metrics,
+            )
+            inner.queue.attach_probe(_probes.stats_tap)
+        else:
+            self.probe = None
         if policy is not None:
             # Tenant-ID-keyed logs (ids are unbounded in policy mode); the
             # inner slot-indexed log stays disabled.
@@ -535,27 +559,100 @@ class Server:
         misses = self.metrics.count("bank.misses")
         return hits / (hits + misses) if hits + misses else 1.0
 
+    # -- observability -------------------------------------------------------
+
+    def _act(self):
+        """Activate this server's tracer (no-op context when untraced)."""
+        return _obtrace.activate(self.tracer)
+
+    def _probe_update(self) -> None:
+        """Fold the queue's latest in-jit tap readout into the monitor
+        (called at flush boundaries — the only host sync the probes add)."""
+        if self.probe is None:
+            return
+        tap = self._inner.queue.last_probe
+        if tap is None:
+            return
+        self.probe.update(
+            {k: float(v) for k, v in tap.items()},
+            tick=self._inner.queue.ticks_served,
+            staleness=self._inner.staleness,
+        )
+
+    def check_read_contract(self, xq) -> float:
+        """Measure the bf16 read-contract error vs the f32 path on a
+        sampled ``(B, Q, d)`` query block against the current replica, and
+        fold it into the probe monitor (when one is configured). Returns
+        the max relative error. Theta families only."""
+        if not self._theta_family:
+            raise ValueError(
+                "bf16 read contract applies to the fused theta families"
+            )
+        with self._act(), _obtrace.span("serve.read_contract"):
+            err = _probes.bf16_read_error(
+                self._inner.snapshot.state,
+                self.feature_map,
+                jnp.asarray(xq),
+                mode=self._inner.mode,
+            )
+            if self.probe is not None:
+                tap = {
+                    k: v
+                    for k, v in self.probe.last_stats.items()
+                    if k not in ("staleness_ticks", "bf16_read_error")
+                }
+                self.probe.update(
+                    tap,
+                    tick=self._inner.queue.ticks_served,
+                    staleness=self._inner.staleness,
+                    bf16_err=err,
+                )
+        return err
+
+    def observability(self) -> dict:
+        """One plain-dict export of everything observable about this
+        server::
+
+            {"metrics": MetricsRegistry.snapshot(),
+             "dispatch": repro.obs.telemetry.snapshot(),   # process-wide
+             "probes": ProbeMonitor.state() | None,
+             "trace": Tracer.summary() | None}
+
+        Stable schema (validated by scripts/check_bench_schema.py for the
+        records the Zipf bench embeds); see README "Observability".
+        """
+        return {
+            "metrics": self.metrics.snapshot(),
+            "dispatch": _telemetry.snapshot(),
+            "probes": self.probe.state() if self.probe is not None else None,
+            "trace": (
+                self.tracer.summary() if self.tracer is not None else None
+            ),
+        }
+
     # -- write path ----------------------------------------------------------
 
     def submit(self, tenant: int, x, y) -> None:
         """Enqueue one observation for ``tenant`` (admitting / evicting /
         rejecting through the policy when one is configured)."""
         t0 = self._lat()
-        self.metrics.counter("requests.write").inc()
-        if self.policy is None:
-            self._inner.submit(tenant, x, y)
-        else:
-            self._policy_submit(tenant, x, y)
-        self.metrics.set_gauge(
-            "queue.backlog", float(sum(self._inner.queue.backlog()))
-        )
-        self.metrics.histogram("latency.write_us").observe(
-            (self._lat() - t0) * 1e6
-        )
-        if self.policy is not None and self.auto_resize:
-            target = self.policy.suggest_size()
-            if target != self.slots:
-                self.resize(target)
+        with self._act(), _obtrace.span("serve.submit", tenant=tenant):
+            self.metrics.counter("requests.write").inc()
+            if self.policy is None:
+                self._inner.submit(tenant, x, y)
+            else:
+                self._policy_submit(tenant, x, y)
+            self._probe_update()
+            self.metrics.set_gauge(
+                "queue.backlog", float(sum(self._inner.queue.backlog()))
+            )
+            self.metrics.histogram("latency.write_us").observe(
+                (self._lat() - t0) * 1e6
+            )
+            if self.policy is not None and self.auto_resize:
+                target = self.policy.suggest_size()
+                if target != self.slots:
+                    self.resize(target)
 
     def _policy_submit(self, tenant: int, x, y) -> None:
         pol = self.policy
@@ -584,22 +681,35 @@ class Server:
         """Rebuild ``tenant``'s state from its log into ``slot``."""
         n = self.log.size(tenant)
         if n:
-            xs, ys = self.log.arrays(tenant)
-            self._inner.queue.state = self._inner._rebuild_fn(
-                self._inner.queue.state, slot, xs, ys
-            )
-            self.metrics.counter("readmissions").inc()
-            self._inner.publish()
+            with _obtrace.span(
+                "serve.install", tenant=tenant, slot=slot, ticks=n
+            ):
+                xs, ys = self.log.arrays(tenant)
+                self._inner.queue.state = self._inner._rebuild_fn(
+                    self._inner.queue.state, slot, xs, ys
+                )
+                self.metrics.counter("readmissions").inc()
+                self._inner.publish()
         return n
 
     def flush(self) -> dict:
-        return self._inner.flush()
+        with self._act(), _obtrace.span("serve.flush"):
+            res = self._inner.flush()
+            self._probe_update()
+            return res
 
     def maybe_flush(self) -> dict:
-        return self._inner.maybe_flush()
+        with self._act():
+            res = self._inner.maybe_flush()
+            if res:
+                self._probe_update()
+            return res
 
     def drain(self) -> dict:
-        return self._inner.drain()
+        with self._act(), _obtrace.span("serve.drain"):
+            res = self._inner.drain()
+            self._probe_update()
+            return res
 
     # -- read path -----------------------------------------------------------
 
@@ -624,55 +734,58 @@ class Server:
         O(1) regardless of replay-log depth.
         """
         t0 = self._lat()
-        self.metrics.counter("requests.read").inc()
-        if self.policy is None:
-            pred = self._slot_predict(tenant, xs)
-        else:
-            self.policy.touch(tenant)
-            slot = self.policy.lookup(tenant)
-            if slot is None:
-                self.metrics.counter("bank.misses").inc()
-                self.metrics.counter("read.cold").inc()
-                xq = np.asarray(xs)
-                shape = () if xq.ndim == 1 else (xq.shape[0],)
-                pred = jnp.zeros(shape, self._inner.queue._dtype)
+        with self._act(), _obtrace.span("serve.predict", tenant=tenant):
+            self.metrics.counter("requests.read").inc()
+            if self.policy is None:
+                pred = self._slot_predict(tenant, xs)
             else:
-                self.metrics.counter("bank.hits").inc()
-                pred = self._slot_predict(slot, xs)
-        self.metrics.histogram("latency.read_us").observe(
-            (self._lat() - t0) * 1e6
-        )
-        return pred
+                self.policy.touch(tenant)
+                slot = self.policy.lookup(tenant)
+                if slot is None:
+                    self.metrics.counter("bank.misses").inc()
+                    self.metrics.counter("read.cold").inc()
+                    xq = np.asarray(xs)
+                    shape = () if xq.ndim == 1 else (xq.shape[0],)
+                    pred = jnp.zeros(shape, self._inner.queue._dtype)
+                else:
+                    self.metrics.counter("bank.hits").inc()
+                    pred = self._slot_predict(slot, xs)
+            self.metrics.histogram("latency.read_us").observe(
+                (self._lat() - t0) * 1e6
+            )
+            return pred
 
     def predict_block(self, xq) -> jax.Array:
         """Serve a ``(B, Q, d)`` query block over the whole bank (slot
         space) in one launch from the frozen replica -> ``(B, Q)``."""
         t0 = self._lat()
-        self.metrics.counter("requests.read").inc()
-        if self._theta_family:
-            pred = self._inner.predict_block(xq)
-        else:
-            pred = self._block_predict(
-                self._inner.snapshot.state, jnp.asarray(xq)
+        with self._act(), _obtrace.span("serve.predict_block"):
+            self.metrics.counter("requests.read").inc()
+            if self._theta_family:
+                pred = self._inner.predict_block(xq)
+            else:
+                pred = self._block_predict(
+                    self._inner.snapshot.state, jnp.asarray(xq)
+                )
+            self.metrics.histogram("latency.read_us").observe(
+                (self._lat() - t0) * 1e6
             )
-        self.metrics.histogram("latency.read_us").observe(
-            (self._lat() - t0) * 1e6
-        )
-        return pred
+            return pred
 
     # -- lifecycle -----------------------------------------------------------
 
     def evict(self, tenant: int) -> int:
         """Release ``tenant``'s slot. Returns dropped pending count."""
-        if self.policy is None:
-            dropped = self._inner.evict(tenant)
-        else:
-            slot = self.policy.release(tenant)
-            if slot is None:
-                return 0
-            dropped = self._inner.release_slot(slot)
-        self.metrics.counter("evictions").inc()
-        return dropped
+        with self._act(), _obtrace.span("serve.evict", tenant=tenant):
+            if self.policy is None:
+                dropped = self._inner.evict(tenant)
+            else:
+                slot = self.policy.release(tenant)
+                if slot is None:
+                    return 0
+                dropped = self._inner.release_slot(slot)
+            self.metrics.counter("evictions").inc()
+            return dropped
 
     def readmit(self, tenant: int) -> int:
         """Re-admit ``tenant``, rebuilding its state from the replay log.
@@ -681,19 +794,20 @@ class Server:
         an operator decision), evicting the coldest incumbent if the bank
         is full. Returns the number of replayed ticks.
         """
-        if self.policy is None:
-            n = self._inner.readmit(tenant)
-            self.metrics.counter("readmissions").inc()
-            return n
-        pol = self.policy
-        if pol.lookup(tenant) is not None:
-            return 0
-        pol.touch(tenant)
-        decision = pol.admit(tenant, force=True)
-        if decision.action == "evict":
-            self.metrics.counter("evictions").inc()
-            self._inner.release_slot(decision.slot)
-        return self._install(tenant, decision.slot)
+        with self._act(), _obtrace.span("serve.readmit", tenant=tenant):
+            if self.policy is None:
+                n = self._inner.readmit(tenant)
+                self.metrics.counter("readmissions").inc()
+                return n
+            pol = self.policy
+            if pol.lookup(tenant) is not None:
+                return 0
+            pol.touch(tenant)
+            decision = pol.admit(tenant, force=True)
+            if decision.action == "evict":
+                self.metrics.counter("evictions").inc()
+                self._inner.release_slot(decision.slot)
+            return self._install(tenant, decision.slot)
 
     def reset(self, state=None) -> None:
         """Restart on a fresh bank state: queue, replica, logs, residency
@@ -733,29 +847,34 @@ class Server:
         cur = self.slots
         if new_slots == cur:
             return
-        self.metrics.counter("resizes").inc()
-        pol, inner = self.policy, self._inner
-        if new_slots < cur:
-            while pol.occupancy > new_slots:
-                self.evict(pol.victim())
-            state = inner.queue.state
-            used = set(pol.resident.values())
-            free_low = [s for s in range(new_slots) if s not in used]
-            for tenant, slot in sorted(
-                pol.resident.items(), key=lambda kv: kv[1]
-            ):
-                if slot < new_slots:
-                    continue
-                dst = free_low.pop(0)
-                state = set_tenant_row(state, dst, tenant_row(state, slot))
-                inner.move_slot(slot, dst)
-                pol.move(tenant, dst)
-            inner.queue.state = state
-        new_state = resize_bank(
-            inner.queue.state, new_slots, fresh_row=self._fresh_row
-        )
-        inner.adopt_resized(new_state)
-        pol.set_slots(new_slots)
+        with self._act(), _obtrace.span(
+            "serve.resize", slots=cur, new_slots=new_slots
+        ):
+            self.metrics.counter("resizes").inc()
+            pol, inner = self.policy, self._inner
+            if new_slots < cur:
+                while pol.occupancy > new_slots:
+                    self.evict(pol.victim())
+                state = inner.queue.state
+                used = set(pol.resident.values())
+                free_low = [s for s in range(new_slots) if s not in used]
+                for tenant, slot in sorted(
+                    pol.resident.items(), key=lambda kv: kv[1]
+                ):
+                    if slot < new_slots:
+                        continue
+                    dst = free_low.pop(0)
+                    state = set_tenant_row(
+                        state, dst, tenant_row(state, slot)
+                    )
+                    inner.move_slot(slot, dst)
+                    pol.move(tenant, dst)
+                inner.queue.state = state
+            new_state = resize_bank(
+                inner.queue.state, new_slots, fresh_row=self._fresh_row
+            )
+            inner.adopt_resized(new_state)
+            pol.set_slots(new_slots)
 
     # -- policy support ------------------------------------------------------
 
@@ -817,6 +936,8 @@ def make_server(
     metrics: Optional[MetricsRegistry] = None,
     input_dim: Optional[int] = None,
     state=None,
+    trace: Union[None, bool, int, _obtrace.Tracer] = None,
+    probe: Union[bool, dict, None] = None,
     **hp,
 ) -> Server:
     """The serving facade: one :class:`Server` for any learner family.
@@ -840,6 +961,18 @@ def make_server(
       auto_resize: apply the policy's pow2 ``suggest_size`` after submits.
       metrics: a shared :class:`MetricsRegistry` (fresh one by default).
       state: initial bank state (fresh init by default).
+      trace: request tracing — ``True`` for a fresh default
+        :class:`~repro.obs.trace.Tracer`, an int for a fresh tracer with
+        that ring capacity, or a ready (possibly shared) instance. The
+        tracer lands on ``server.tracer`` (export via ``to_chrome_trace``
+        / ``to_jsonl``); every public server method activates it, so
+        queue / snapshot / kernel-dispatch spans nest under the request.
+      probe: in-jit numerics probes — ``True`` fuses the
+        :func:`~repro.obs.probes.stats_tap` into the flush program and
+        monitors it against :data:`~repro.obs.probes.DEFAULT_THRESHOLDS`;
+        a dict overrides thresholds (``{"name": value}`` or
+        ``{"name": ("min"|"max", value)}``). Monitor lands on
+        ``server.probe``; export via :meth:`Server.observability`.
       **hp: family hyperparameters — ``mu``, ``eps``, ``lam``, ``beta``,
         ``sigma``, ``quant_eps``, ``nu``, ``capacity`` (scalars; the
         per-tenant (B,) sweeps stay on the core tiers).
@@ -884,6 +1017,12 @@ def make_server(
         evict_fn=evict_fn,
         rebuild_fn=rebuild_fn,
     )
+    if isinstance(trace, _obtrace.Tracer):
+        tracer = trace
+    elif isinstance(trace, bool) or trace is None:
+        tracer = _obtrace.Tracer() if trace else None
+    else:
+        tracer = _obtrace.Tracer(capacity=int(trace))
     return Server(
         inner,
         learner=learner,
@@ -894,4 +1033,6 @@ def make_server(
         metrics=metrics,
         log_capacity=log_capacity,
         auto_resize=auto_resize,
+        tracer=tracer,
+        probe=probe,
     )

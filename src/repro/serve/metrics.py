@@ -1,23 +1,37 @@
 """Lightweight serving metrics: counters, gauges, log-bucketed histograms.
 
-The policy tier (serve/policy.py) and the serving facade (serve/api.py)
-need to answer "what happens when tenants ≫ slots" with *numbers* —
-evictions, readmissions, admission rejects, queue backlog, and the
-per-request latency distribution under skewed load. This module is the
-smallest registry that supports that: pure host-side Python (no jax, no
-locks — the serve path is single-threaded like the queue it instruments),
-O(1) per observation, and a ``snapshot()`` that renders everything to a
-plain JSON-able dict for the Zipf benchmark's ``BENCH_zipf.json`` records.
+The policy tier (serve/policy.py), the serving facade (serve/api.py) and
+the observability layer (repro/obs) need to answer "what happens when
+tenants ≫ slots" and "is the hot path healthy" with *numbers* —
+evictions, readmissions, admission rejects, queue backlog, kernel-launch
+counts, and the per-request latency distribution under skewed load. This
+module is the smallest registry that supports that: pure host-side Python
+(no jax, no locks — the serve path is single-threaded like the queue it
+instruments), O(1) per observation, and a ``snapshot()`` that renders
+everything to a plain JSON-able dict for the Zipf benchmark's
+``BENCH_zipf.json`` records and ``Server.observability()``.
 
-Histograms use fixed geometric (base-2) buckets so a latency observation
-costs one ``bit_length`` — no sorting, no reservoir — and percentiles are
-estimated by linear interpolation inside the winning bucket (resolution is
-one octave, which is plenty for p50/p95/p99 columns whose purpose is
-trajectory tracking, not microsecond forensics). Exact min/max are kept so
-the tails of the estimate never leave the observed range.
+Metrics may carry **labels** (``registry.counter("kernel.launches",
+op="klms_chunk")``); a labeled metric is keyed by its rendered name
+``kernel.launches{op=klms_chunk}`` so snapshots stay flat dicts and the
+bench tooling needs no schema change.
+
+Histograms use fixed geometric (base-2) buckets so an observation costs
+one ``math.frexp`` — no sorting, no reservoir — and percentiles are
+estimated by linear interpolation inside the winning bucket (resolution
+is one octave, which is plenty for p50/p95/p99 columns whose purpose is
+trajectory tracking, not microsecond forensics). Bucketing is on the
+*float* exponent, so sub-unit observations (ms-scale latencies recorded
+in seconds, bf16 error magnitudes ~1e-3) resolve into distinct buckets
+instead of collapsing into bucket 0 the way the old ``int(v).bit_length()``
+rule did. Exact min/max are kept so the tails of the estimate never
+leave the observed range. ``Histogram.merge`` sums two histograms with
+identical bucketing — the cross-registry aggregation primitive for
+multi-server / multi-host rollups.
 """
 from __future__ import annotations
 
+import math
 from typing import Optional
 
 __all__ = ["Counter", "Histogram", "MetricsRegistry"]
@@ -38,26 +52,43 @@ class Counter:
 class Histogram:
     """Geometric-bucket histogram over non-negative observations.
 
-    Bucket ``i`` holds values in ``[2**(i-1), 2**i)`` (bucket 0 holds
-    ``[0, 1)``), measured in whatever unit the caller observes — the serve
-    facade records microseconds. ``percentile`` walks the cumulative
-    counts and interpolates linearly within the target bucket, clamped to
-    the exact observed ``[min, max]``.
+    Bucket ``i`` holds values whose ``math.frexp`` exponent is
+    ``i - EXP_OFFSET``, i.e. the half-open octave
+    ``[2**(i - EXP_OFFSET - 1), 2**(i - EXP_OFFSET))``; bucket 0 holds
+    zero and anything below ``2**-EXP_OFFSET``. With the default 64
+    buckets the resolvable range spans ~6e-8 .. 5.5e11 — microsecond
+    latencies, second-scale latencies, and bf16 error floors all land in
+    interior buckets. ``percentile`` walks the cumulative counts and
+    interpolates linearly within the target bucket, clamped to the exact
+    observed ``[min, max]``.
     """
 
     __slots__ = ("counts", "count", "total", "min", "max")
 
-    def __init__(self, max_buckets: int = 40) -> None:
+    # Exponent floor: bucket index = frexp exponent + EXP_OFFSET.
+    EXP_OFFSET = 24
+
+    def __init__(self, max_buckets: int = 64) -> None:
         self.counts = [0] * max_buckets
         self.count = 0
         self.total = 0.0
         self.min: Optional[float] = None
         self.max: Optional[float] = None
 
+    def _bucket(self, v: float) -> int:
+        if v <= 0.0:
+            return 0
+        return min(
+            len(self.counts) - 1, max(0, math.frexp(v)[1] + self.EXP_OFFSET)
+        )
+
+    def _bucket_range(self, i: int) -> tuple[float, float]:
+        lo = 0.0 if i == 0 else 2.0 ** (i - self.EXP_OFFSET - 1)
+        return lo, 2.0 ** (i - self.EXP_OFFSET)
+
     def observe(self, value: float) -> None:
         v = max(0.0, float(value))
-        idx = min(len(self.counts) - 1, int(v).bit_length())
-        self.counts[idx] += 1
+        self.counts[self._bucket(v)] += 1
         self.count += 1
         self.total += v
         self.min = v if self.min is None else min(self.min, v)
@@ -77,13 +108,37 @@ class Histogram:
             if not c:
                 continue
             if seen + c >= target:
-                lo = 0.0 if i == 0 else float(2 ** (i - 1))
-                hi = float(2**i)
+                lo, hi = self._bucket_range(i)
                 frac = (target - seen) / c
                 est = lo + frac * (hi - lo)
                 return min(max(est, self.min), self.max)
             seen += c
         return self.max  # pragma: no cover - target <= count by construction
+
+    def merge(self, other: "Histogram") -> "Histogram":
+        """Fold ``other`` into self (in place; returns self).
+
+        Both histograms must share the bucketing (same bucket count) —
+        the percentile estimate of the merge is then exactly the estimate
+        a single histogram observing both streams would give.
+        """
+        if len(self.counts) != len(other.counts):
+            raise ValueError(
+                f"bucket mismatch: {len(self.counts)} vs {len(other.counts)}"
+            )
+        for i, c in enumerate(other.counts):
+            self.counts[i] += c
+        self.count += other.count
+        self.total += other.total
+        for bound, pick in (("min", min), ("max", max)):
+            theirs = getattr(other, bound)
+            if theirs is not None:
+                ours = getattr(self, bound)
+                setattr(
+                    self, bound,
+                    theirs if ours is None else pick(ours, theirs),
+                )
+        return self
 
     def summary(self) -> dict:
         return {
@@ -97,14 +152,26 @@ class Histogram:
         }
 
 
+def _key(name: str, labels: dict) -> str:
+    """Render a metric identity: ``name`` or ``name{k=v,...}`` (sorted)."""
+    if not labels:
+        return name
+    inner = ",".join(f"{k}={labels[k]}" for k in sorted(labels))
+    return f"{name}{{{inner}}}"
+
+
 class MetricsRegistry:
-    """Name -> metric registry with create-on-first-use semantics.
+    """Name (+ labels) -> metric registry with create-on-first-use.
 
     One registry instruments one server; ``snapshot()`` is the stable
     export format (plain dict) the Zipf bench embeds per record::
 
         {"counters": {name: int}, "gauges": {name: float},
          "histograms": {name: {count, mean, min, max, p50, p95, p99}}}
+
+    Labeled metrics appear under their rendered ``name{k=v}`` key.
+    ``merge`` folds another registry in (counters add, gauges last-write-
+    wins, histograms bucket-merge) for cross-registry aggregation.
     """
 
     def __init__(self) -> None:
@@ -112,26 +179,37 @@ class MetricsRegistry:
         self._gauges: dict[str, float] = {}
         self._histograms: dict[str, Histogram] = {}
 
-    def counter(self, name: str) -> Counter:
-        if name not in self._counters:
-            self._counters[name] = Counter()
-        return self._counters[name]
+    def counter(self, name: str, **labels) -> Counter:
+        key = _key(name, labels)
+        if key not in self._counters:
+            self._counters[key] = Counter()
+        return self._counters[key]
 
-    def histogram(self, name: str) -> Histogram:
-        if name not in self._histograms:
-            self._histograms[name] = Histogram()
-        return self._histograms[name]
+    def histogram(self, name: str, **labels) -> Histogram:
+        key = _key(name, labels)
+        if key not in self._histograms:
+            self._histograms[key] = Histogram()
+        return self._histograms[key]
 
-    def set_gauge(self, name: str, value: float) -> None:
-        self._gauges[name] = float(value)
+    def set_gauge(self, name: str, value: float, **labels) -> None:
+        self._gauges[_key(name, labels)] = float(value)
 
-    def gauge(self, name: str, default: float = 0.0) -> float:
-        return self._gauges.get(name, default)
+    def gauge(self, name: str, default: float = 0.0, **labels) -> float:
+        return self._gauges.get(_key(name, labels), default)
 
-    def count(self, name: str) -> int:
+    def count(self, name: str, **labels) -> int:
         """Current value of a counter (0 if never incremented)."""
-        c = self._counters.get(name)
+        c = self._counters.get(_key(name, labels))
         return c.value if c is not None else 0
+
+    def merge(self, other: "MetricsRegistry") -> "MetricsRegistry":
+        """Fold ``other``'s metrics into self (in place; returns self)."""
+        for k, c in other._counters.items():
+            self.counter(k).inc(c.value)
+        self._gauges.update(other._gauges)
+        for k, h in other._histograms.items():
+            self.histogram(k).merge(h)
+        return self
 
     def snapshot(self) -> dict:
         return {

@@ -24,13 +24,15 @@ traces exactly once.
 from __future__ import annotations
 
 from collections import deque
-from typing import Callable, Union
+from typing import Callable, Optional, Union
 
 import jax
 import numpy as np
 
 from repro.core.bank import set_tenant_row
 from repro.features.base import FeatureLike
+from repro.obs import telemetry as _telemetry
+from repro.obs import trace as _trace
 
 __all__ = [
     "MicroBatchQueue",
@@ -94,6 +96,7 @@ class MicroBatchQueue:
 
     def __init__(self, chunk_step: Callable, state, input_dim: int,
                  chunk: int = 16, adaptive: bool = False):
+        self._base_chunk_step = chunk_step
         self._chunk_step = chunk_step
         self.state = state
         self.input_dim = input_dim
@@ -108,6 +111,31 @@ class MicroBatchQueue:
         self.arrivals = [0] * self.num_tenants
         self.ticks_served = 0
         self.flushes = 0
+        self.last_probe: Optional[dict] = None
+
+    def attach_probe(self, probe_fn: Callable) -> None:
+        """Fuse a numerics tap into the flush program (obs/probes.py).
+
+        ``probe_fn(state) -> {name: 0-d array}`` is composed *after* the
+        chunk step inside one jitted program, so flush stays a single
+        launch — the tap's reductions ride along instead of re-reading the
+        state from HBM in a second dispatch. The latest readout lands in
+        ``last_probe`` as device scalars; hosts (the serve facade's probe
+        monitor) materialize it only at flush boundaries. Pass ``None``
+        to detach and restore the bare step.
+        """
+        if probe_fn is None:
+            self._chunk_step = self._base_chunk_step
+            self.last_probe = None
+            return
+        base = self._base_chunk_step
+
+        @jax.jit
+        def probed_step(state, xs, ys, mask):
+            state, out = base(state, xs, ys, mask)
+            return state, out, probe_fn(state)
+
+        self._chunk_step = probed_step
 
     def submit(self, tenant: int, x, y) -> None:
         """Enqueue one ``(x, y)`` observation for ``tenant``."""
@@ -182,29 +210,48 @@ class MicroBatchQueue:
         """One chunked launch over up to T queued ticks per tenant."""
         bsz, tlen, d = self.num_tenants, self._flush_chunk(), self.input_dim
         if not any(self._pending):
+            _trace.instant("queue.flush.skip", tenants=bsz)
             return {}
-        xs = np.zeros((bsz, tlen, d), self._dtype)
-        ys = np.zeros((bsz, tlen), self._dtype)
-        mask = np.zeros((bsz, tlen), self._dtype)
-        counts = []
-        for b, q in enumerate(self._pending):
-            take = min(len(q), tlen)
-            for t in range(take):
-                x, y = q.popleft()
-                xs[b, t] = x
-                ys[b, t] = y
-                mask[b, t] = 1.0
-            counts.append(take)
-        self.state, out = self._chunk_step(self.state, xs, ys, mask)
-        preds = np.asarray(out.prediction)
-        errs = np.asarray(out.error)
-        self.flushes += 1
-        self.ticks_served += sum(counts)
-        return {
-            b: [(float(preds[b, t]), float(errs[b, t])) for t in range(c)]
-            for b, c in enumerate(counts)
-            if c
-        }
+        with _trace.span(
+            "queue.flush", tenants=bsz, chunk=tlen, adaptive=self.adaptive
+        ) as sp:
+            xs = np.zeros((bsz, tlen, d), self._dtype)
+            ys = np.zeros((bsz, tlen), self._dtype)
+            mask = np.zeros((bsz, tlen), self._dtype)
+            counts = []
+            for b, q in enumerate(self._pending):
+                take = min(len(q), tlen)
+                for t in range(take):
+                    x, y = q.popleft()
+                    xs[b, t] = x
+                    ys[b, t] = y
+                    mask[b, t] = 1.0
+                counts.append(take)
+            result = self._chunk_step(self.state, xs, ys, mask)
+            if len(result) == 3:
+                self.state, out, self.last_probe = result
+            else:
+                self.state, out = result
+            preds = np.asarray(out.prediction)
+            errs = np.asarray(out.error)
+            self.flushes += 1
+            served = sum(counts)
+            self.ticks_served += served
+            # One compiled-program execution per flush: the live launch
+            # count for the serve path (the in-program kernel dispatches
+            # were counted at trace time under kernel.traces).
+            _telemetry.registry().counter(
+                "dispatch.launches", site="queue.flush"
+            ).inc()
+            if sp is not None:
+                sp.attrs["ticks"] = served
+                sp.attrs["active"] = sum(1 for c in counts if c)
+                sp.attrs["residual_backlog"] = sum(self.backlog())
+            return {
+                b: [(float(preds[b, t]), float(errs[b, t])) for t in range(c)]
+                for b, c in enumerate(counts)
+                if c
+            }
 
     def drain(self) -> dict[int, list[tuple[float, float]]]:
         """Flush until all backlogs are empty; merge per-tenant results."""

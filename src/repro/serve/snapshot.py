@@ -45,6 +45,7 @@ import numpy as np
 
 from repro.core.bank import bank_predict_block, evict_tenant, rebuild_tenant
 from repro.features.base import FeatureLike
+from repro.obs import trace as _trace
 from repro.serve.queue import MicroBatchQueue
 
 __all__ = [
@@ -394,9 +395,15 @@ class SnapshotServer:
                     "(use the klms/krls factories or pass one)"
                 )
             xs, ys = self.log.arrays(tenant)
-            self.queue.state = self._rebuild_fn(
-                self.queue.state, tenant, xs, ys
-            )
+            with _trace.span(
+                "snapshot.rebuild",
+                tenant=tenant,
+                ticks=len(ys),
+                complete=self.log.complete(tenant),
+            ):
+                self.queue.state = self._rebuild_fn(
+                    self.queue.state, tenant, xs, ys
+                )
             replayed = len(ys)
         self._evicted.discard(tenant)
         self.publish()
@@ -495,6 +502,11 @@ class SnapshotServer:
             state=self.queue.state,
             version=self._snapshot.version + 1,
             tick=self.queue.ticks_served,
+        )
+        _trace.instant(
+            "snapshot.publish",
+            version=self._snapshot.version,
+            tick=self._snapshot.tick,
         )
         return self._snapshot
 
