@@ -20,8 +20,9 @@ The feature-quality and serve-read-path suites keep their own record
 schemas (they predate/outgrow the CSV contract); a clean full pass
 delegates to their modules' writers so ``python -m benchmarks.run``
 regenerates ``BENCH_features.json``, ``BENCH_serve.json``,
-``BENCH_replay.json`` and ``BENCH_decode.json`` too, and ``--only
-features`` / ``--only serve`` / ``--only replay`` / ``--only decode``
+``BENCH_replay.json``, ``BENCH_decode.json`` and
+``BENCH_recovery.json`` too, and ``--only features`` / ``--only serve``
+/ ``--only replay`` / ``--only decode`` / ``--only recovery``
 regenerates just that file.
 """
 from __future__ import annotations
@@ -38,6 +39,7 @@ from benchmarks import (
     kernels_bench,
     krls_shard_bench,
     paper,
+    recovery_bench,
     replay_bench,
     roofline_report,
     serve_bench,
@@ -73,6 +75,7 @@ SUITE_OF = {
 DELEGATED = {
     "decode": decode_bench.main,
     "features": features_bench.main,
+    "recovery": recovery_bench.main,
     "replay": replay_bench.main,
     "serve": serve_bench.main,
     "zipf": zipf_bench.main,

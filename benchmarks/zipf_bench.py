@@ -72,6 +72,7 @@ def run_config(
     log_capacity: int = 64,
     seed: int = 0,
     trace_out: str | None = None,
+    ckpt: bool = False,
 ) -> dict:
     import jax
 
@@ -79,8 +80,7 @@ def run_config(
     from repro.serve import make_server
 
     rff = sample_rff(jax.random.PRNGKey(0), d, dfeat, 1.0)
-    srv = make_server(
-        learner,
+    server_kw = dict(
         feature_map=rff,
         bank=bank,
         chunk=chunk,
@@ -88,9 +88,9 @@ def run_config(
         policy=policy,
         log_capacity=log_capacity,
         size_watermark=chunk,
-        trace=trace_out is not None,
         probe=True,
     )
+    srv = make_server(learner, trace=trace_out is not None, **server_kw)
     rng = np.random.default_rng(seed)
     ids = zipf_stream(rng, tenants, alpha, requests)
     xs = rng.standard_normal((requests, d)).astype(np.float32)
@@ -106,6 +106,27 @@ def run_config(
     bf16_err = srv.check_read_contract(
         xs[: bank * 4].reshape(bank, 4, d)
     )
+    ckpt_bitwise = None
+    if ckpt:
+        # Durability smoke riding the Zipf drive: checkpoint the loaded
+        # server, restore into a fresh one, and demand a bitwise match on
+        # every state leaf (the chaos suite covers kill-mid-stream; this
+        # keeps the round-trip contract exercised at serving shapes).
+        import tempfile
+
+        from repro.serve.recovery import restore_checkpoint
+
+        with tempfile.TemporaryDirectory() as tmp:
+            srv.checkpoint(tmp)
+            fresh = make_server(learner, **server_kw)
+            restore_checkpoint(fresh, tmp)
+            ckpt_bitwise = all(
+                bool(np.array_equal(np.asarray(a), np.asarray(b),
+                                    equal_nan=True))
+                for a, b in zip(jax.tree.leaves(srv.queue.state),
+                                jax.tree.leaves(fresh.queue.state))
+            )
+            assert ckpt_bitwise, "checkpoint round-trip lost state"
     probe = srv.probe.state()
     snap = srv.metrics.snapshot()
     lat = snap["histograms"]
@@ -116,7 +137,7 @@ def run_config(
         h = lat.get(name, {})
         return {k: round(h.get(k, 0.0), 1) for k in ("p50", "p95", "p99")}
 
-    return {
+    rec = {
         "bench": "zipf_serve",
         "learner": learner,
         "policy": policy,
@@ -139,6 +160,9 @@ def run_config(
             "degradation_events": probe["total_events"],
         },
     }
+    if ckpt_bitwise is not None:
+        rec["ckpt_bitwise"] = ckpt_bitwise
+    return rec
 
 
 def cost_vs_lru_notes(records: list[dict]) -> list[str]:
@@ -178,6 +202,9 @@ def main(argv=None) -> int:
     parser.add_argument("--trace", default=None, metavar="PATH",
                         help="run the first recorded config traced and "
                              "write its Chrome trace-event JSON here")
+    parser.add_argument("--ckpt", action="store_true",
+                        help="checkpoint/restore round-trip on the first "
+                             "recorded config (asserts a bitwise match)")
     args = parser.parse_args(argv)
 
     import jax
@@ -209,6 +236,7 @@ def main(argv=None) -> int:
                 rec = run_config(
                     policy, alpha, bank, tenants, requests=requests,
                     trace_out=trace_out,
+                    ckpt=args.ckpt and not records,
                 )
                 records.append(rec)
                 print(

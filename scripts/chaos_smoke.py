@@ -1,0 +1,163 @@
+#!/usr/bin/env python
+"""CI chaos smoke: the whole fault matrix through a tiny policy server.
+
+Cheap, deterministic end-to-end check of the self-healing loop — one
+klms server, every injectable fault kind, and for each a hard assertion
+of the full causal chain:
+
+    fault -> exactly one ``probe.degraded`` event at the faulted flush's
+    fold -> one quarantine episode -> a verified repair -> release ->
+    healthy end state with no event ever re-firing.
+
+(klms is the one family where "exactly one event" holds for every kind:
+the fused kernel collapses Inf poison to NaN so only the ``finite``
+probe fires; the generic-scan families can legitimately trip two probes
+in the same fold, which the full chaos suite in tests/test_chaos.py
+covers.) ``clock_skew`` is the global no-quarantine case: one event, one
+reclock repair, skew back under threshold.
+
+Usage::
+
+    PYTHONPATH=src python scripts/chaos_smoke.py
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+TENANT = 1
+
+# kind -> (probe that must fire, terminal repair action)
+MATRIX = {
+    "nan_state": ("finite", "rebuild"),
+    "asym_pmat": ("finite", "rebuild"),  # klms has no P: Inf-poison path
+    "log_corrupt": ("finite", "reset"),
+    "drop_flush": ("ticks_lag", "rebuild"),
+}
+
+
+def make_srv(make_server, rff, **extra):
+    return make_server(
+        "klms", feature_map=rff, bank=4, chunk=4, mu=0.3,
+        policy="lru", log_capacity=256, **extra,
+    )
+
+
+def traffic(seed, n, tenants=3):
+    rng = np.random.default_rng(seed)
+    return [
+        (
+            int(rng.integers(0, tenants)),
+            rng.standard_normal(3).astype(np.float32),
+            float(rng.standard_normal()),
+        )
+        for _ in range(n)
+    ]
+
+
+def drive(srv, kind, Fault, FaultInjector, FaultPlan):
+    """Warm -> inject at one flush -> tail; return events-at-detection."""
+    arrivals = traffic(7, 60)
+    warm, mid, tail = arrivals[:30], arrivals[30:42], arrivals[42:]
+    if kind != "drop_flush":
+        mid = [a for a in mid if a[0] != TENANT]
+    for t, x, y in warm:
+        srv.submit(t, x, y)
+    srv.drain()
+    assert srv.probe.total_events == 0, "degraded during warmup"
+
+    inj = FaultInjector(
+        srv, FaultPlan([Fault(kind, tenant=TENANT, at_flush=0)])
+    ).attach()
+    for t, x, y in mid:
+        srv.submit(t, x, y)
+    srv.flush()
+    srv.drain()
+    inj.detach()
+    assert inj.applied, f"{kind}: fault never applied"
+    at_detect = srv.probe.total_events
+
+    for t, x, y in tail:
+        srv.submit(t, x, y)
+    srv.drain()
+    return at_detect
+
+
+def check_kind(kind, make_server, rff, faults) -> str:
+    import jax
+
+    Fault, FaultInjector, FaultPlan = faults
+    srv = make_srv(make_server, rff, recovery=True)
+    at_detect = drive(srv, kind, Fault, FaultInjector, FaultPlan)
+
+    probe_name, action = MATRIX[kind]
+    counters = srv.metrics.snapshot()["counters"]
+    assert at_detect == 1, f"{kind}: {at_detect} events, expected exactly 1"
+    assert srv.probe.events[0].probe == probe_name, (
+        f"{kind}: fired {srv.probe.events[0].probe!r}, "
+        f"expected {probe_name!r}"
+    )
+    assert srv.probe.total_events == at_detect, f"{kind}: event re-fired"
+    assert counters["recovery.quarantines"] == 1, f"{kind}: quarantines"
+    assert counters["recovery.releases"] == 1, f"{kind}: releases"
+    assert counters[f"recovery.repairs{{action={action}}}"] == 1, (
+        f"{kind}: expected one {action} repair; history="
+        f"{srv.recovery.history}"
+    )
+    assert srv.recovery.history[-1]["verified"], f"{kind}: unverified repair"
+    assert srv.recovery.quarantined == frozenset(), f"{kind}: still quarantined"
+    for leaf in jax.tree.leaves(srv.queue.state):
+        assert np.isfinite(np.asarray(leaf)).all(), f"{kind}: non-finite end"
+    return f"{probe_name} -> {action}"
+
+
+def check_clock_skew(make_server, rff, faults) -> str:
+    Fault, FaultInjector, FaultPlan = faults
+    srv = make_srv(
+        make_server, rff,
+        probe={"clock_skew": 0.25},
+        recovery={"reference_clock": time.monotonic},
+    )
+    arrivals = traffic(8, 40)
+    for t, x, y in arrivals[:30]:
+        srv.submit(t, x, y)
+    srv.drain()
+    inj = FaultInjector(
+        srv,
+        FaultPlan([Fault("clock_skew", tenant=0, at_flush=0, magnitude=2.0)]),
+    ).attach()
+    for t, x, y in arrivals[30:]:
+        srv.submit(t, x, y)
+    srv.drain()
+    inj.detach()
+    counters = srv.metrics.snapshot()["counters"]
+    assert srv.probe.total_events == 1, "clock_skew: expected exactly 1 event"
+    assert srv.probe.events[0].probe == "clock_skew"
+    assert counters["recovery.repairs{action=reclock}"] == 1
+    assert srv.recovery.quarantined == frozenset()
+    assert srv.recovery.measure_skew() < 0.25, "clock_skew: not reclocked"
+    return "clock_skew -> reclock"
+
+
+def main() -> int:
+    import jax
+
+    from repro.core.rff import sample_rff
+    from repro.obs.faults import Fault, FaultInjector, FaultPlan
+    from repro.serve import make_server
+
+    rff = sample_rff(jax.random.PRNGKey(0), 3, 32, 1.0)
+    faults = (Fault, FaultInjector, FaultPlan)
+    for kind in MATRIX:
+        outcome = check_kind(kind, make_server, rff, faults)
+        print(f"chaos_smoke: {kind:<12} OK ({outcome})", flush=True)
+    outcome = check_clock_skew(make_server, rff, faults)
+    print(f"chaos_smoke: clock_skew   OK ({outcome})", flush=True)
+    print("chaos_smoke: all faults detected, repaired, released")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

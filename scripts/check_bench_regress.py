@@ -95,6 +95,22 @@ SPECS = {
         },
         "wall": {"us_per_token": 10.0},
     },
+    "recovery": {
+        "join": ("bench", "learner", "fault", "action", "log_len",
+                 "slots", "dfeat"),
+        "wall": {
+            "detect_us": 10.0,
+            "repair_us": 10.0,
+            "save_us": 10.0,
+            "restore_us": 10.0,
+        },
+        # Self-healing invariants hold at ANY shape: every episode ends
+        # healthy and every checkpoint round-trip is lossless.
+        "bounds": {
+            "end_healthy": ("min", 1.0),
+            "state_bitwise": ("min", 1.0),
+        },
+    },
     "zipf": {
         "join": ("bench", "learner", "policy", "alpha", "ratio"),
         "wall": {"write_us.p99": 10.0, "read_us.p99": 10.0},
@@ -106,6 +122,9 @@ SPECS = {
             "probes.bf16_read_error": ("max", 2e-2),
             "probes.degradation_events": ("max", 0),
             "hit_rate": ("min", 0.0),
+            # Present only on --ckpt runs (CI smoke): the round-trip must
+            # be lossless whenever it is exercised.
+            "ckpt_bitwise": ("min", 1.0),
         },
     },
 }

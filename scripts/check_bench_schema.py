@@ -68,6 +68,20 @@ DECODE_RECORD_KEYS = {
 DECODE_MIN_CONTEXTS = 3
 DECODE_MIN_BLOCK_TS = 2
 
+# The recovery suite (benchmarks/recovery_bench.py) promises the
+# self-healing columns the README "Robustness" section documents, per
+# record kind; the committed full-shape baseline must additionally cover
+# every ladder rung and a log-length sweep for the rebuild rung. Smoke
+# artifacts keep the per-record contract but may cover fewer points.
+RECOVERY_RECORD_KEYS = {
+    "recovery_repair": ("learner", "fault", "action", "log_len",
+                        "detect_us", "repair_us", "end_healthy"),
+    "ckpt_roundtrip": ("learner", "slots", "dfeat", "save_us",
+                       "restore_us", "bytes", "state_bitwise"),
+}
+RECOVERY_REQUIRED_ACTIONS = ("resymmetrize", "rebuild", "reset")
+RECOVERY_MIN_LOG_LENS = 2
+
 
 def check_decode(path: str, payload: dict) -> list[str]:
     """Decode-suite-specific validation (called for suite == "decode")."""
@@ -92,6 +106,35 @@ def check_decode(path: str, payload: dict) -> list[str]:
                 f"{path}: baseline covers {len(block_ts)} block sizes, "
                 f"needs >= {DECODE_MIN_BLOCK_TS}"
             )
+    return errors
+
+
+def check_recovery(path: str, payload: dict) -> list[str]:
+    """Recovery-suite-specific validation (for suite == "recovery")."""
+    errors = []
+    records = [r for r in payload.get("records", []) if isinstance(r, dict)]
+    for i, rec in enumerate(records):
+        for key in RECOVERY_RECORD_KEYS.get(rec.get("bench"), ()):
+            if key not in rec:
+                errors.append(f"{path}: records[{i}] missing {key!r}")
+    if not payload.get("tiny"):
+        actions = {r.get("action") for r in records
+                   if r.get("bench") == "recovery_repair"}
+        for action in RECOVERY_REQUIRED_ACTIONS:
+            if action not in actions:
+                errors.append(
+                    f"{path}: baseline never exercises the {action!r} "
+                    f"ladder rung"
+                )
+        log_lens = {r.get("log_len") for r in records
+                    if r.get("action") == "rebuild"} - {None}
+        if len(log_lens) < RECOVERY_MIN_LOG_LENS:
+            errors.append(
+                f"{path}: rebuild covers {len(log_lens)} log lengths, "
+                f"needs >= {RECOVERY_MIN_LOG_LENS}"
+            )
+        if not any(r.get("bench") == "ckpt_roundtrip" for r in records):
+            errors.append(f"{path}: baseline has no ckpt_roundtrip record")
     return errors
 
 
@@ -202,6 +245,8 @@ def check_file(path: str) -> list[str]:
         errors.extend(check_zipf(path, payload))
     if payload.get("suite") == "decode":
         errors.extend(check_decode(path, payload))
+    if payload.get("suite") == "recovery":
+        errors.extend(check_recovery(path, payload))
     return errors
 
 

@@ -77,6 +77,7 @@ __all__ = [
     "tenant_row",
     "set_tenant_row",
     "evict_tenant",
+    "resymmetrize_tenant",
     "rebuild_tenant",
     "bank_size",
     "resize_bank",
@@ -781,6 +782,28 @@ def resize_bank(
             return jnp.concatenate([a, pad], axis=0)
 
         return jax.tree.map(grow, state, fresh_row)
+
+
+def resymmetrize_tenant(state, tenant: int):
+    """Project slot ``tenant``'s P back onto the symmetric matrices.
+
+    ``P <- (P + P^T) / 2`` is the cheapest rung of the recovery ladder:
+    the RLS covariance is symmetric by construction, so any measured
+    asymmetry is accumulated drift (or an injected fault) and the
+    symmetric projection is the closest matrix in Frobenius norm. The
+    repair is exact on the structure (``(a + b) / 2`` is symmetric in
+    f32) but only bounds the value error by the asymmetric part's norm —
+    the recovery tier verifies via probes and escalates to a log replay
+    if predictions stay degraded. Raises ``ValueError`` for bank states
+    without a P leaf (LMS/dictionary families have nothing to project).
+    """
+    if not hasattr(state, "pmat"):
+        raise ValueError("resymmetrize_tenant needs a bank state with a P leaf")
+    with _trace.span("bank.resymmetrize_tenant", tenant=tenant):
+        p = state.pmat[tenant]
+        return state._replace(
+            pmat=state.pmat.at[tenant].set((p + p.T) / 2)
+        )
 
 
 def rebuild_tenant(

@@ -11,6 +11,9 @@ stays one launch per flush:
 * :mod:`repro.obs.probes` — in-jit numerics health taps (finiteness,
   norms, KRLS P-matrix drift), the bf16 read-contract probe, and the
   threshold monitor that raises structured degradation events.
+* :mod:`repro.obs.faults` — deterministic, seedable fault injection at
+  flush boundaries, one fault kind per probe threshold (chaos tests and
+  the recovery bench drive ``serve/recovery.py`` through it).
 
 Wired through ``repro.serve.make_server(trace=..., probe=...)`` and
 exported by ``Server.observability()``; see README "Observability".
@@ -28,9 +31,11 @@ from repro.obs.probes import (
     DegradationEvent,
     ProbeMonitor,
     bf16_read_error,
+    slot_stats,
     stats_tap,
 )
 from repro.obs import telemetry
+from repro.obs.faults import FAULT_KINDS, Fault, FaultInjector, FaultPlan
 
 __all__ = [
     "Span",
@@ -43,6 +48,11 @@ __all__ = [
     "DegradationEvent",
     "ProbeMonitor",
     "bf16_read_error",
+    "slot_stats",
     "stats_tap",
     "telemetry",
+    "FAULT_KINDS",
+    "Fault",
+    "FaultInjector",
+    "FaultPlan",
 ]

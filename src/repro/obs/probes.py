@@ -43,6 +43,7 @@ __all__ = [
     "DegradationEvent",
     "ProbeMonitor",
     "bf16_read_error",
+    "slot_stats",
     "stats_tap",
 ]
 
@@ -104,7 +105,63 @@ def stats_tap(state) -> dict[str, jax.Array]:
             dmin, dmax = jnp.min(diag), jnp.max(diag)
             stats["pmat.diag_min"] = dmin
             stats["pmat.diag_max"] = dmax
-            stats["pmat.cond_proxy"] = dmax / (dmin + _TINY)
+            # Zero diagonal entries are empty dictionary rows (ALD's
+            # unused capacity), not conditioning blowups — the proxy
+            # spreads only over the occupied part.
+            dmin_pos = jnp.min(jnp.where(diag > 0, diag, jnp.inf))
+            stats["pmat.cond_proxy"] = jnp.where(
+                jnp.isinf(dmin_pos), 0.0, dmax / (dmin_pos + _TINY)
+            )
+    stats["finite"] = finite.astype(jnp.float32)
+    return stats
+
+
+@jax.jit
+def slot_stats(state) -> dict[str, jax.Array]:
+    """Per-slot diagnostics for the recovery tier: the same quantities
+    :func:`stats_tap` reduces over the whole bank, kept per slot.
+
+    Returns ``(B,)`` arrays — ``finite`` (1.0/0.0 per slot),
+    ``theta.norm`` (per-row L2 when a theta leaf exists), and
+    ``pmat.asym_rel`` / ``pmat.cond_proxy`` when a P leaf exists. The
+    bank-global tap stays one fused reduction on the hot path; this
+    per-slot pass runs only on the rare event path, where the recovery
+    policy must localize a degradation to a tenant before quarantining.
+    """
+    leaves = jax.tree_util.tree_flatten_with_path(state)[0]
+    bsz = leaves[0][1].shape[0]
+    stats: dict[str, jax.Array] = {}
+    finite = jnp.ones((bsz,), dtype=bool)
+    for path, leaf in leaves:
+        if not jnp.issubdtype(leaf.dtype, jnp.floating):
+            continue
+        name = _path_name(path)
+        leaf32 = leaf.astype(jnp.float32)
+        axes = tuple(range(1, leaf.ndim))
+        finite = jnp.logical_and(
+            finite, jnp.all(jnp.isfinite(leaf), axis=axes)
+        )
+        if name.endswith("theta") and leaf.ndim >= 2:
+            stats["theta.norm"] = jnp.sqrt(
+                jnp.sum(leaf32 * leaf32, axis=-1)
+            )
+        if name.endswith("pmat") and leaf.ndim >= 3:
+            asym = jnp.max(
+                jnp.abs(leaf32 - jnp.swapaxes(leaf32, -1, -2)),
+                axis=(-2, -1),
+            )
+            scale = jnp.max(jnp.abs(leaf32), axis=(-2, -1))
+            stats["pmat.asym_rel"] = asym / (scale + _TINY)
+            diag = jnp.abs(jnp.diagonal(leaf32, axis1=-2, axis2=-1))
+            # Same empty-dictionary-row exclusion as the bank-global tap.
+            dmin_pos = jnp.min(
+                jnp.where(diag > 0, diag, jnp.inf), axis=-1
+            )
+            stats["pmat.cond_proxy"] = jnp.where(
+                jnp.isinf(dmin_pos),
+                0.0,
+                jnp.max(diag, axis=-1) / (dmin_pos + _TINY),
+            )
     stats["finite"] = finite.astype(jnp.float32)
     return stats
 
@@ -151,6 +208,11 @@ class DegradationEvent:
 
 
 # probe -> ("max" breaches above, "min" breaches below), threshold value.
+# ``ticks_lag`` (acknowledged-but-never-trained arrivals, from the serve
+# facade's expected-ticks ledger) is active by default at 0: any positive
+# lag means observations were silently lost between queue and bank.
+# ``clock_skew`` ships off (inf) — it needs a trusted reference clock,
+# which only the recovery tier provides.
 DEFAULT_THRESHOLDS: dict[str, tuple[str, float]] = {
     "finite": ("min", 1.0),
     "theta.norm_max": ("max", 1e6),
@@ -158,6 +220,8 @@ DEFAULT_THRESHOLDS: dict[str, tuple[str, float]] = {
     "pmat.cond_proxy": ("max", 1e12),
     "staleness_ticks": ("max", float("inf")),
     "bf16_read_error": ("max", 2e-2),
+    "ticks_lag": ("max", 0.0),
+    "clock_skew": ("max", float("inf")),
 }
 
 
@@ -196,6 +260,14 @@ class ProbeMonitor:
         self.last_stats: dict[str, float] = {}
         self.last_tick: Optional[int] = None
         self.updates = 0
+        self._subscribers: list[Callable[[DegradationEvent], None]] = []
+
+    def subscribe(self, fn: Callable[[DegradationEvent], None]) -> None:
+        """Register a callback invoked (synchronously, from ``update``)
+        for every degradation event. Subscribers must only *record* the
+        event — the recovery tier enqueues and acts later, outside the
+        update, so a callback can never mutate state mid-probe."""
+        self._subscribers.append(fn)
 
     def _fire(self, ev: DegradationEvent) -> None:
         self.total_events += 1
@@ -205,6 +277,8 @@ class ProbeMonitor:
         obtrace.instant("probe.degraded", **ev.to_dict())
         if self.registry is not None:
             self.registry.counter("probe.degraded", probe=ev.probe).inc()
+        for fn in self._subscribers:
+            fn(ev)
 
     def update(
         self,

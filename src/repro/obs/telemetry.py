@@ -34,6 +34,8 @@ __all__ = [
     "reset",
     "snapshot",
     "record_dispatch",
+    "record_wal_append",
+    "record_checkpoint",
     "klms_chunk_bytes",
     "krls_chunk_bytes",
     "predict_read_bytes",
@@ -86,6 +88,26 @@ def record_dispatch(
             reg.counter("kernel.remainder_launches", op=op).inc(remainder)
     if bytes_moved is not None:
         reg.set_gauge("kernel.bytes_moved", float(bytes_moved), op=op)
+
+
+def record_wal_append(*, replayed: bool = False) -> None:
+    """Count one write-ahead-log append (``wal.appends``), or one entry
+    re-fed through ``submit`` during restore (``wal.replayed``)."""
+    reg = registry()
+    if replayed:
+        reg.counter("wal.replayed").inc()
+    else:
+        reg.counter("wal.appends").inc()
+
+
+def record_checkpoint(*, bytes_written: int, restore: bool = False) -> None:
+    """Count one durable checkpoint save (or restore) and gauge its size."""
+    reg = registry()
+    if restore:
+        reg.counter("checkpoint.restores").inc()
+    else:
+        reg.counter("checkpoint.saves").inc()
+    reg.set_gauge("checkpoint.bytes", float(bytes_written))
 
 
 # ---------------------------------------------------------------------------

@@ -12,6 +12,12 @@ from repro.serve.api import (
 from repro.serve.metrics import Counter, Histogram, MetricsRegistry
 from repro.serve.policy import SCORERS, AdmitDecision, SlotPolicy
 from repro.serve.queue import MicroBatchQueue
+from repro.serve.recovery import (
+    DurableLog,
+    RecoveryPolicy,
+    restore_checkpoint,
+    save_checkpoint,
+)
 from repro.serve.snapshot import ReplayLog, SnapshotServer, StateSnapshot
 
 # Deprecated pre-facade entry points (DeprecationWarning shims; see
@@ -56,6 +62,11 @@ __all__ = [
     "SnapshotServer",
     "StateSnapshot",
     "ReplayLog",
+    # self-healing + durability tier
+    "RecoveryPolicy",
+    "DurableLog",
+    "save_checkpoint",
+    "restore_checkpoint",
     # deprecated shims
     "make_bank_server",
     "serve_bank_stream",

@@ -82,7 +82,8 @@ from repro.obs import trace as _obtrace
 from repro.serve.metrics import MetricsRegistry
 from repro.serve.policy import SlotPolicy
 from repro.serve.queue import MicroBatchQueue
-from repro.serve.snapshot import ReplayLog, SnapshotServer
+from repro.serve.recovery import DurableLog, RecoveryPolicy, save_checkpoint
+from repro.serve.snapshot import ReplayLog, SnapshotServer, predict_row
 
 __all__ = [
     "LEARNER_FAMILIES",
@@ -477,6 +478,8 @@ class Server:
         latency_clock: Callable[[], float] = time.perf_counter,
         tracer: Optional[_obtrace.Tracer] = None,
         probe: Union[bool, dict, None] = None,
+        recovery: Optional[RecoveryPolicy] = None,
+        wal: Optional[DurableLog] = None,
     ):
         self._inner = inner
         self.learner = learner
@@ -489,6 +492,15 @@ class Server:
         self._lat = latency_clock
         self._theta_family = learner in _THETA_FAMILIES
         self.tracer = tracer
+        self.wal = wal
+        self._wal_suspended = False
+        # Expected-ticks ledger, slot-keyed: observations this facade put
+        # on the queue that the bank is on the hook to train. The
+        # ``ticks_lag`` probe compares it against backlog + the state's
+        # step counters — a positive gap means arrivals were acknowledged
+        # but silently lost between queue and bank.
+        self._expected: dict[int, int] = {}
+        self._probe_folded_flush = -1
         if probe:
             self.probe = _probes.ProbeMonitor(
                 probe if isinstance(probe, dict) else None,
@@ -508,6 +520,9 @@ class Server:
         # A pristine row captured before any training: the pad row for
         # bank growth (theta 0 / P_0 = I/lam / zeroed dictionaries).
         self._fresh_row = tenant_row(inner.queue.state, 0)
+        self.recovery = recovery
+        if recovery is not None:
+            recovery.bind(self)
         if not self._theta_family:
             pf = lrn.predict_fn
             self._row_predict = jax.jit(
@@ -565,19 +580,51 @@ class Server:
         """Activate this server's tracer (no-op context when untraced)."""
         return _obtrace.activate(self.tracer)
 
+    def _slot_lags(self) -> list[int]:
+        """Per-slot expected-minus-trained tick gap: the facade's ledger
+        against queue backlog plus the state's own step counters. A
+        positive entry means observations this server queued were never
+        folded into the bank (the ``ticks_lag`` probe / a dropped flush);
+        negative entries (someone fed the queue directly, bypassing the
+        facade) are legal and never fire."""
+        step = np.asarray(self._inner.queue.state.step)
+        backlog = self._inner.queue.backlog()
+        return [
+            self._expected.get(s, 0) - backlog[s] - int(step[s])
+            for s in range(self.slots)
+        ]
+
+    def _note_queued(self, slot: int) -> None:
+        self._expected[slot] = self._expected.get(slot, 0) + 1
+
     def _probe_update(self) -> None:
-        """Fold the queue's latest in-jit tap readout into the monitor
-        (called at flush boundaries — the only host sync the probes add)."""
+        """Fold the queue's latest in-jit tap readout into the monitor —
+        once per flush (the tap only changes at flush boundaries, and
+        re-folding a stale readout would re-fire its events), then let
+        the recovery policy act on anything that fired."""
         if self.probe is None:
             return
-        tap = self._inner.queue.last_probe
-        if tap is None:
+        queue = self._inner.queue
+        tap = queue.last_probe
+        if tap is None or queue.flushes == self._probe_folded_flush:
+            if self.recovery is not None:
+                self.recovery.process()  # backoff retries between flushes
             return
+        self._probe_folded_flush = queue.flushes
+        stats = {k: float(v) for k, v in tap.items()}
+        stats["ticks_lag"] = float(max(self._slot_lags(), default=0))
+        if (
+            self.recovery is not None
+            and self.recovery.reference_clock is not None
+        ):
+            stats["clock_skew"] = self.recovery.measure_skew()
         self.probe.update(
-            {k: float(v) for k, v in tap.items()},
-            tick=self._inner.queue.ticks_served,
+            stats,
+            tick=queue.ticks_served,
             staleness=self._inner.staleness,
         )
+        if self.recovery is not None:
+            self.recovery.process()
 
     def check_read_contract(self, xq) -> float:
         """Measure the bf16 read-contract error vs the f32 path on a
@@ -599,7 +646,8 @@ class Server:
                 tap = {
                     k: v
                     for k, v in self.probe.last_stats.items()
-                    if k not in ("staleness_ticks", "bf16_read_error")
+                    if k not in ("staleness_ticks", "bf16_read_error",
+                                 "ticks_lag", "clock_skew")
                 }
                 self.probe.update(
                     tap,
@@ -638,7 +686,16 @@ class Server:
         t0 = self._lat()
         with self._act(), _obtrace.span("serve.submit", tenant=tenant):
             self.metrics.counter("requests.write").inc()
-            if self.policy is None:
+            if self.wal is not None and not self._wal_suspended:
+                self.wal.append(tenant, x, y)
+            if (
+                self.recovery is not None
+                and tenant in self.recovery.quarantined
+            ):
+                self._quarantined_submit(tenant, x, y)
+            elif self.policy is None:
+                if tenant not in self._inner._evicted:
+                    self._note_queued(tenant)
                 self._inner.submit(tenant, x, y)
             else:
                 self._policy_submit(tenant, x, y)
@@ -672,10 +729,24 @@ class Server:
             if decision.action == "evict":
                 self.metrics.counter("evictions").inc()
                 self._inner.release_slot(decision.slot)
+                self._expected[decision.slot] = 0
             slot = decision.slot
             self._install(tenant, slot)
         self.log.append(tenant, x, y)
+        self._note_queued(slot)
         self._inner.submit(slot, x, y)
+
+    def _quarantined_submit(self, tenant: int, x, y) -> None:
+        """A quarantined tenant's arrivals are logged, never trained —
+        a rebuild repair replays them; a reset forfeits them with the
+        rest of the history. The policy clock still ticks so admission
+        ordering stays deterministic across the episode."""
+        self.metrics.counter("recovery.deferred").inc()
+        if self.policy is not None:
+            self.policy.touch(tenant)
+            self.log.append(tenant, x, y)
+        elif self.log is not None:
+            self.log.append(tenant, x, y)
 
     def _install(self, tenant: int, slot: int) -> int:
         """Rebuild ``tenant``'s state from its log into ``slot``."""
@@ -690,6 +761,7 @@ class Server:
                 )
                 self.metrics.counter("readmissions").inc()
                 self._inner.publish()
+        self._expected[slot] = n
         return n
 
     def flush(self) -> dict:
@@ -736,7 +808,12 @@ class Server:
         t0 = self._lat()
         with self._act(), _obtrace.span("serve.predict", tenant=tenant):
             self.metrics.counter("requests.read").inc()
-            if self.policy is None:
+            if (
+                self.recovery is not None
+                and tenant in self.recovery.quarantined
+            ):
+                pred = self._quarantined_predict(tenant, xs)
+            elif self.policy is None:
                 pred = self._slot_predict(tenant, xs)
             else:
                 self.policy.touch(tenant)
@@ -754,6 +831,29 @@ class Server:
                 (self._lat() - t0) * 1e6
             )
             return pred
+
+    def _quarantined_predict(self, tenant: int, xs) -> jax.Array:
+        """Serve a quarantined tenant's reads from the captured
+        last-healthy replica row (cold zeros if it was never seen
+        healthy) — the degraded slot is never read."""
+        self.metrics.counter("read.quarantined").inc()
+        if self.policy is not None:
+            self.policy.touch(tenant)
+        row = self.recovery.healthy_row(tenant)
+        xq = jnp.asarray(xs)
+        single = xq.ndim == 1
+        if single:
+            xq = xq[None]
+        if row is None:
+            pred = jnp.zeros((xq.shape[0],), self._inner.queue._dtype)
+        elif self._theta_family:
+            pred = predict_row(
+                row.theta, xq, self.feature_map,
+                mode=self._inner.mode, precision=self._inner.precision,
+            )
+        else:
+            pred = self._row_predict(row, xq)
+        return pred[0] if single else pred
 
     def predict_block(self, xq) -> jax.Array:
         """Serve a ``(B, Q, d)`` query block over the whole bank (slot
@@ -779,11 +879,13 @@ class Server:
         with self._act(), _obtrace.span("serve.evict", tenant=tenant):
             if self.policy is None:
                 dropped = self._inner.evict(tenant)
+                self._expected[tenant] = 0
             else:
                 slot = self.policy.release(tenant)
                 if slot is None:
                     return 0
                 dropped = self._inner.release_slot(slot)
+                self._expected[slot] = 0
             self.metrics.counter("evictions").inc()
             return dropped
 
@@ -797,6 +899,7 @@ class Server:
         with self._act(), _obtrace.span("serve.readmit", tenant=tenant):
             if self.policy is None:
                 n = self._inner.readmit(tenant)
+                self._expected[tenant] = n
                 self.metrics.counter("readmissions").inc()
                 return n
             pol = self.policy
@@ -807,7 +910,38 @@ class Server:
             if decision.action == "evict":
                 self.metrics.counter("evictions").inc()
                 self._inner.release_slot(decision.slot)
+                self._expected[decision.slot] = 0
             return self._install(tenant, decision.slot)
+
+    def reset_tenant(self, tenant: int) -> int:
+        """Reset ONE tenant to a fresh row — the O(1) last rung of the
+        recovery ladder, also useful as an operator action. The tenant's
+        replay history (and its ring-overflow flag) is forgotten with the
+        state; in policy mode a resident tenant keeps its slot. Returns
+        the dropped pending count."""
+        with self._act(), _obtrace.span("serve.reset_tenant", tenant=tenant):
+            self.metrics.counter("resets").inc()
+            if self.policy is None:
+                dropped = self._inner.reset_tenant(tenant)
+                self._expected[tenant] = 0
+                return dropped
+            self.log.clear(tenant)
+            slot = self.policy.lookup(tenant)
+            if slot is None:
+                return 0
+            inner = self._inner
+            dropped = inner.queue.drop_pending(slot)
+            inner._arrival_times[slot].clear()
+            inner.queue.state = inner._evict_fn(inner.queue.state, slot)
+            inner.publish()
+            self._expected[slot] = 0
+            return dropped
+
+    def checkpoint(self, directory, *, keep: int = 3) -> str:
+        """Write one durable checkpoint generation of this server's full
+        state (serve/recovery.py); returns the checkpoint path."""
+        with self._act():
+            return save_checkpoint(self, directory, keep=keep)
 
     def reset(self, state=None) -> None:
         """Restart on a fresh bank state: queue, replica, logs, residency
@@ -820,6 +954,7 @@ class Server:
             )
             state = set_tenant_row(state, 0, self._fresh_row)
         self._inner.reset(state)
+        self._expected.clear()
         if self.policy is not None:
             self.log.clear()
             pol = self.policy
@@ -868,12 +1003,16 @@ class Server:
                         state, dst, tenant_row(state, slot)
                     )
                     inner.move_slot(slot, dst)
+                    self._expected[dst] = self._expected.pop(slot, 0)
                     pol.move(tenant, dst)
                 inner.queue.state = state
             new_state = resize_bank(
                 inner.queue.state, new_slots, fresh_row=self._fresh_row
             )
             inner.adopt_resized(new_state)
+            self._expected = {
+                s: v for s, v in self._expected.items() if s < new_slots
+            }
             pol.set_slots(new_slots)
 
     # -- policy support ------------------------------------------------------
@@ -938,6 +1077,8 @@ def make_server(
     state=None,
     trace: Union[None, bool, int, _obtrace.Tracer] = None,
     probe: Union[bool, dict, None] = None,
+    recovery: Union[None, bool, dict, RecoveryPolicy] = None,
+    wal: Union[None, str, DurableLog] = None,
     **hp,
 ) -> Server:
     """The serving facade: one :class:`Server` for any learner family.
@@ -973,6 +1114,18 @@ def make_server(
         a dict overrides thresholds (``{"name": value}`` or
         ``{"name": ("min"|"max", value)}``). Monitor lands on
         ``server.probe``; export via :meth:`Server.observability`.
+      recovery: probe-triggered self-healing (serve/recovery.py) —
+        ``True`` for a default :class:`~repro.serve.recovery
+        .RecoveryPolicy`, a kwargs dict (``max_retries`` /
+        ``backoff_base`` / ``backoff_factor`` / ``clock`` /
+        ``reference_clock``), or a ready instance. Implies ``probe=True``
+        when probes were not requested; the policy lands on
+        ``server.recovery``.
+      wal: durable write-ahead log — a JSONL path or a ready
+        :class:`~repro.serve.recovery.DurableLog`. Every ``submit`` is
+        appended before it is queued; ``Server.checkpoint`` +
+        ``restore_checkpoint`` replay the post-checkpoint suffix so a
+        killed server restores bitwise (README "Robustness").
       **hp: family hyperparameters — ``mu``, ``eps``, ``lam``, ``beta``,
         ``sigma``, ``quant_eps``, ``nu``, ``capacity`` (scalars; the
         per-tenant (B,) sweeps stay on the core tiers).
@@ -1003,6 +1156,20 @@ def make_server(
     else:
         evict_fn = evict_tenant
 
+    rec: Optional[RecoveryPolicy] = None
+    if recovery:
+        if isinstance(recovery, RecoveryPolicy):
+            rec = recovery
+        elif isinstance(recovery, dict):
+            rec = RecoveryPolicy(**recovery)
+        else:
+            rec = RecoveryPolicy()
+        if not probe:
+            probe = True
+    if wal is None or isinstance(wal, DurableLog):
+        wal_log = wal
+    else:
+        wal_log = DurableLog(wal)
     pol = _resolve_policy(policy, bank)
     inner = SnapshotServer(
         queue,
@@ -1035,4 +1202,6 @@ def make_server(
         auto_resize=auto_resize,
         tracer=tracer,
         probe=probe,
+        recovery=rec,
+        wal=wal_log,
     )

@@ -212,6 +212,47 @@ class SlotPolicy:
             raise KeyError(f"tenant {tenant} is not resident")
         self._resident[tenant] = new_slot
 
+    # -- durability ---------------------------------------------------------
+
+    def state_dict(self) -> dict:
+        """Plain-dict export of the policy's mutable state (checkpointing).
+
+        Covers everything admission decisions depend on — logical clock,
+        touch history, residency, free list, reject pressure — so a
+        restored policy makes the same decisions the live one would have.
+        ``cost_fn`` is a live callable and is NOT serialized; the facade
+        re-wires it at restore.
+        """
+        return {
+            "slots": self.slots,
+            "scorer": self.scorer_name,
+            "clock": self.clock,
+            "last_touch": dict(self.last_touch),
+            "touches": dict(self.touches),
+            "resident": dict(self._resident),
+            "free": list(self._free),
+            "rejects_since_resize": self.rejects_since_resize,
+        }
+
+    def load_state(self, d: dict) -> None:
+        """Restore the mutable state exported by :meth:`state_dict`.
+
+        The receiving policy must already be built with the same scorer
+        and structural knobs; slot count is adopted from the snapshot.
+        """
+        if d["scorer"] != self.scorer_name:
+            raise ValueError(
+                f"checkpoint scorer {d['scorer']!r} != policy scorer "
+                f"{self.scorer_name!r}"
+            )
+        self.slots = int(d["slots"])
+        self.clock = int(d["clock"])
+        self.last_touch = {int(k): int(v) for k, v in d["last_touch"].items()}
+        self.touches = {int(k): int(v) for k, v in d["touches"].items()}
+        self._resident = {int(k): int(v) for k, v in d["resident"].items()}
+        self._free = [int(s) for s in d["free"]]
+        self.rejects_since_resize = int(d["rejects_since_resize"])
+
     # -- capacity -----------------------------------------------------------
 
     def suggest_size(self) -> int:

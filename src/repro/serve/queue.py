@@ -23,6 +23,7 @@ traces exactly once.
 """
 from __future__ import annotations
 
+import time
 from collections import deque
 from typing import Callable, Optional, Union
 
@@ -87,6 +88,13 @@ class MicroBatchQueue:
         log2(chunk)+1 shapes ever trace; ragged-stream equivalence is
         unchanged (tested). ``arrivals`` tracks cumulative per-tenant
         arrival counts as the adaptation/monitoring signal.
+      stale_after: watchdog age bound in ``clock`` units. Under adaptive
+        flush a quiet bank can strand a minority tenant's ticks
+        indefinitely (nothing ever trips the size watermark); with a
+        bound set, :meth:`has_stale` reports any arrival pending longer
+        than this and :meth:`maybe_flush` force-flushes it, counting
+        ``queue.stale_flush``. ``None`` (default) disables the watchdog.
+      clock: injectable time source for the watchdog (tests pin it).
 
     ``submit`` enqueues one observation; ``flush`` processes up to T queued
     observations per tenant in arrival order and returns
@@ -95,22 +103,34 @@ class MicroBatchQueue:
     """
 
     def __init__(self, chunk_step: Callable, state, input_dim: int,
-                 chunk: int = 16, adaptive: bool = False):
+                 chunk: int = 16, adaptive: bool = False,
+                 stale_after: Optional[float] = None,
+                 clock: Callable[[], float] = time.monotonic):
         self._base_chunk_step = chunk_step
         self._chunk_step = chunk_step
         self.state = state
         self.input_dim = input_dim
         self.chunk = chunk
         self.adaptive = adaptive
+        self.stale_after = stale_after
+        self._clock = clock
         lead = jax.tree.leaves(state)[0]
         self.num_tenants = int(lead.shape[0])
         # Buffers take the bank's working precision (f64 banks under x64
         # must not round-trip observations through f32).
         self._dtype = np.dtype(lead.dtype)
         self._pending = [deque() for _ in range(self.num_tenants)]
+        # Watchdog ledger: when each slot's *oldest* pending arrival was
+        # enqueued (None = empty backlog). Set on the 0 -> 1 transition,
+        # kept across partial flushes (the residual head is older than any
+        # new arrival), cleared when the backlog empties.
+        self._first_pending_at: list[Optional[float]] = (
+            [None] * self.num_tenants
+        )
         self.arrivals = [0] * self.num_tenants
         self.ticks_served = 0
         self.flushes = 0
+        self.stale_flushes = 0
         self.last_probe: Optional[dict] = None
 
     def attach_probe(self, probe_fn: Callable) -> None:
@@ -140,6 +160,8 @@ class MicroBatchQueue:
     def submit(self, tenant: int, x, y) -> None:
         """Enqueue one ``(x, y)`` observation for ``tenant``."""
         self.arrivals[tenant] += 1
+        if not self._pending[tenant] and self.stale_after is not None:
+            self._first_pending_at[tenant] = self._clock()
         self._pending[tenant].append(
             (np.asarray(x, self._dtype), self._dtype.type(y)),
         )
@@ -157,6 +179,7 @@ class MicroBatchQueue:
         """
         dropped = len(self._pending[tenant])
         self._pending[tenant].clear()
+        self._first_pending_at[tenant] = None
         return dropped
 
     def move_slot(self, src: int, dst: int) -> None:
@@ -167,6 +190,8 @@ class MicroBatchQueue:
             return
         self._pending[dst] = self._pending[src]
         self._pending[src] = deque()
+        self._first_pending_at[dst] = self._first_pending_at[src]
+        self._first_pending_at[src] = None
         self.arrivals[dst] = self.arrivals[src]
         self.arrivals[src] = 0
 
@@ -183,9 +208,11 @@ class MicroBatchQueue:
         if new_b >= self.num_tenants:
             grow = new_b - self.num_tenants
             self._pending.extend(deque() for _ in range(grow))
+            self._first_pending_at.extend([None] * grow)
             self.arrivals.extend([0] * grow)
         else:
             self._pending = self._pending[:new_b]
+            self._first_pending_at = self._first_pending_at[:new_b]
             self.arrivals = self.arrivals[:new_b]
         self.num_tenants = new_b
 
@@ -205,6 +232,34 @@ class MicroBatchQueue:
             return self.chunk
         depth = max(1, max(self.backlog(), default=1))
         return min(self.chunk, 1 << (depth - 1).bit_length())
+
+    def has_stale(self) -> bool:
+        """True when some arrival has been pending past ``stale_after``.
+
+        Always False with the watchdog disabled (``stale_after=None``).
+        """
+        if self.stale_after is None:
+            return False
+        now = self._clock()
+        return any(
+            t0 is not None and now - t0 >= self.stale_after
+            for t0 in self._first_pending_at
+        )
+
+    def maybe_flush(self) -> dict[int, list[tuple[float, float]]]:
+        """Watchdog flush: launch only if some backlog has gone stale.
+
+        The stranded-tenant guard for adaptive/externally-paced flushing —
+        a minority tenant whose arrivals never trip the caller's size
+        watermark still gets trained within ``stale_after``. Each forced
+        launch increments ``stale_flushes`` and the ``queue.stale_flush``
+        counter.
+        """
+        if not self.has_stale():
+            return {}
+        self.stale_flushes += 1
+        _telemetry.registry().counter("queue.stale_flush").inc()
+        return self.flush()
 
     def flush(self) -> dict[int, list[tuple[float, float]]]:
         """One chunked launch over up to T queued ticks per tenant."""
@@ -227,6 +282,10 @@ class MicroBatchQueue:
                     ys[b, t] = y
                     mask[b, t] = 1.0
                 counts.append(take)
+                if not q:
+                    self._first_pending_at[b] = None
+                # Residual backlog keeps its stamp: the surviving head is
+                # at least as old as the arrival that set it.
             result = self._chunk_step(self.state, xs, ys, mask)
             if len(result) == 3:
                 self.state, out, self.last_probe = result

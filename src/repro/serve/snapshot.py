@@ -52,6 +52,7 @@ __all__ = [
     "ReplayLog",
     "StateSnapshot",
     "SnapshotServer",
+    "predict_row",
     "klms_snapshot_server",
     "krls_snapshot_server",
 ]
@@ -169,6 +170,21 @@ class _Row(NamedTuple):
 @partial(jax.jit, static_argnames=("mode", "precision"))
 def _predict_block_jit(state, xq, fm, mode, precision):
     return bank_predict_block(state, xq, fm, mode=mode, precision=precision)
+
+
+def predict_row(theta, xq, rff, *, mode: str = "auto",
+                precision: Optional[str] = None) -> jax.Array:
+    """Fused predict from one bare ``(D,)`` theta row: ``xq (Q, d)`` ->
+    ``(Q,)``. The quarantine read path (serve/recovery.py) serves a
+    tenant's captured last-healthy row through this without needing the
+    row to live in any bank."""
+    return _predict_block_jit(
+        _Row(theta=jnp.asarray(theta)[None]),
+        jnp.asarray(xq)[None],
+        rff,
+        mode=mode,
+        precision=precision,
+    )[0]
 
 
 class SnapshotServer:
